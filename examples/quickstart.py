@@ -1,0 +1,48 @@
+"""Quickstart: train the EdgeRL A2C controller on the paper's testbed env
+(3 UAVs running VGG / ResNet / DenseNet against one edge server) and
+compare the learned policy with the static baselines.
+
+    PYTHONPATH=src python examples/quickstart.py [--episodes 300]
+"""
+import argparse
+
+import jax
+
+from repro.core import (A2CConfig, RewardWeights, agent_policy,
+                        evaluate_policy, make_paper_env, train_agent)
+from repro.core.baselines import POLICIES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=300)
+    ap.add_argument("--w-acc", type=float, default=1 / 3)
+    ap.add_argument("--w-lat", type=float, default=1 / 3)
+    ap.add_argument("--w-energy", type=float, default=1 / 3)
+    args = ap.parse_args()
+
+    weights = RewardWeights(w_acc=args.w_acc, w_lat=args.w_lat,
+                            w_energy=args.w_energy)
+    cfg, tables = make_paper_env(weights=weights)
+    print(f"env: {cfg.n_uavs} UAVs, models={tables.names}, "
+          f"delta={cfg.slot_seconds}s, weights=({args.w_acc:.2f},"
+          f"{args.w_lat:.2f},{args.w_energy:.2f})")
+
+    print(f"\ntraining A2C for {args.episodes} episodes ...")
+    params, hist = train_agent(cfg, tables, A2CConfig(episodes=args.episodes),
+                               log_every=max(args.episodes // 6, 1))
+
+    print("\npolicy comparison (2 eval episodes each):")
+    pols = dict(POLICIES)
+    pols["a2c_agent"] = agent_policy(params)
+    for name, pol in pols.items():
+        m = evaluate_policy(cfg, tables, pol, jax.random.key(1), episodes=2)
+        modal = " ".join(f"{k}=v{v[0]}c{v[1]}"
+                         for k, v in m["modal_selection"].items())
+        print(f"  {name:14s} reward={m['reward']:+.3f} "
+              f"lat={m['latency']*1e3:6.1f}ms E={m['energy']:.3f}J  {modal}")
+    print("\n(v = model version index, c = cut-point index; see Table I)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving: prefill + scanned decode with KV caches across
+architectures (dense GQA, MLA+MoE, SSM, hybrid — the cache machinery
+differs per family; the engine API does not).
+
+    PYTHONPATH=src python examples/serve_batch.py [--new-tokens 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init
+from repro.serving import ServeConfig, ServingEngine
+
+ARCHS = ["qwen2-0.5b", "deepseek-v2-lite-16b", "falcon-mamba-7b",
+         "recurrentgemma-2b"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    args = ap.parse_args()
+
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init(cfg, jax.random.key(0))
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(max_new_tokens=args.new_tokens))
+        toks = (jnp.arange(args.batch * args.prompt_len, dtype=jnp.int32)
+                .reshape(args.batch, args.prompt_len) * 13) % cfg.vocab_size
+        batch = {"tokens": toks}
+        if cfg.cross_attn_every:
+            batch["media"] = jnp.zeros(
+                (args.batch, cfg.n_media_tokens, cfg.d_model))
+        if cfg.enc_dec:
+            batch["enc_frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model))
+        t0 = time.time()
+        out = eng.generate(batch)
+        dt = time.time() - t0
+        per_tok = dt / args.new_tokens * 1e3
+        print(f"{arch:24s} [{cfg.family:6s}] generated {out.shape} "
+              f"in {dt:5.2f}s ({per_tok:6.1f} ms/tok incl. compile)  "
+              f"sample={list(map(int, out[0, :6]))}")
+
+
+if __name__ == "__main__":
+    main()

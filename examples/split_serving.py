@@ -1,0 +1,71 @@
+"""EdgeRL-routed split inference on a transformer (the paper's deployment
+pattern mapped to the TPU stack, DESIGN.md §2).
+
+The controller trains on the TPU-adapted env (device submesh <-> server
+submesh, ICI uplink), then its greedy decisions route request batches:
+(version j, cut l) -> head jit on the "device", activation across the
+link, tail jit on the "server". Prints per-slot decisions with the
+activation bytes that would cross the link and the env's cost estimates.
+
+    PYTHONPATH=src python examples/split_serving.py [--arch qwen2-0.5b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (A2CConfig, decide, env_reset, env_step, make_tpu_env,
+                        train_agent)
+from repro.core.env import action_costs
+from repro.core.partition import cut_points
+from repro.models import init
+from repro.serving import SplitServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--episodes", type=int, default=120)
+    ap.add_argument("--slots", type=int, default=6)
+    args = ap.parse_args()
+
+    # 1) controller: train A2C on the TPU-adapted EdgeRL env
+    env_cfg, tables = make_tpu_env([args.arch])
+    print(f"training controller on TPU env for {args.episodes} episodes ...")
+    agent, _ = train_agent(env_cfg, tables, A2CConfig(episodes=args.episodes))
+
+    # 2) executor: reduced model + split engine (head/tail jits)
+    cfg = get_config(args.arch).reduced()
+    params = init(cfg, jax.random.key(0))
+    engine = SplitServingEngine(cfg, params)
+    cuts = cut_points(cfg)
+    toks = (jnp.arange(2 * 32, dtype=jnp.int32).reshape(2, 32) * 11) \
+        % cfg.vocab_size
+    batch = {"tokens": toks}
+    if cfg.cross_attn_every:
+        batch["media"] = jnp.zeros((2, cfg.n_media_tokens, cfg.d_model))
+    if cfg.enc_dec:
+        batch["enc_frames"] = jnp.zeros((2, cfg.encoder_seq, cfg.d_model))
+
+    # 3) serve: each slot, controller decides -> engine executes that cut
+    state = env_reset(env_cfg, tables, jax.random.key(7))
+    rng = jax.random.key(3)
+    print(f"\n{'slot':>4} {'ver':>4} {'cut':>10} {'act_bytes':>10} "
+          f"{'est_lat_ms':>10} {'est_E_J':>8}")
+    for t in range(args.slots):
+        actions = decide(agent, env_cfg, tables, state)
+        j, k = int(actions[0, 0]), int(actions[0, 1])
+        # map the env's cut index onto the reduced model's legal boundaries
+        cut = cuts[min(k * len(cuts) // tables.n_cuts, len(cuts) - 1)]
+        logits, nbytes = engine.infer(batch, cut)
+        _, _, _, t_total, e_inf = action_costs(env_cfg, tables, state, actions)
+        print(f"{t:4d} {j:4d} {str(cut):>10} {nbytes:10d} "
+              f"{float(t_total[0])*1e3:10.2f} {float(e_inf[0]):8.3f}")
+        rng, k_env = jax.random.split(rng)
+        state, _, _ = env_step(env_cfg, tables, state, actions, k_env)
+    print("\nlogits shape:", logits.shape, "(classification-style scoring)")
+
+
+if __name__ == "__main__":
+    main()

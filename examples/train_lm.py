@@ -1,0 +1,85 @@
+"""End-to-end training driver: train a qwen2-family LM on the synthetic
+deterministic pipeline with AdamW + cosine schedule + checkpointing.
+
+Default is a quick CPU-sized run (~1.4M params, loss visibly decreases in
+~100 steps). ``--size 100m`` selects the ~124M-parameter config (the
+"train a ~100M model for a few hundred steps" driver — sized for real
+hardware; on this CPU container expect minutes/step).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 120
+    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models import init, n_params
+from repro.optim import AdamWConfig, adamw_init
+
+
+def build_cfg(size: str):
+    base = get_config("qwen2-0.5b")
+    if size == "100m":
+        return base.with_overrides(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+            d_ff=2048, vocab_size=50_304, tie_embeddings=False)
+    return base.reduced().with_overrides(n_layers=2, d_model=128, d_ff=256,
+                                         vocab_size=512)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="small", choices=["small", "100m"])
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.size)
+    print(f"model: {cfg.name} variant={args.size} params={n_params(cfg):,}")
+    params = init(cfg, jax.random.key(0))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps,
+                      weight_decay=0.01)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=False))
+
+    start = 0
+    if (s := latest_step(args.ckpt_dir)) is not None:
+        params = restore_checkpoint(args.ckpt_dir, s, params)
+        start = s
+        print(f"resumed from checkpoint step {s}")
+
+    ds = SyntheticLMDataset(cfg, DataConfig(batch_size=args.batch,
+                                            seq_len=args.seq))
+    t0, first_loss = time.time(), None
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if first_loss is None:
+            first_loss = float(m["loss"])
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1:4d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"gnorm={float(m['grad_norm']):.2f}", flush=True)
+        if (i + 1) % args.ckpt_every == 0:
+            path = save_checkpoint(args.ckpt_dir, i + 1, params)
+            print(f"  checkpoint -> {path}")
+    dt = time.time() - t0
+    final = float(m["loss"])
+    print(f"\ndone: {args.steps - start} steps in {dt:.1f}s "
+          f"({dt/(args.steps-start+1e-9):.2f}s/step); "
+          f"loss {first_loss:.3f} -> {final:.3f}")
+    assert final < first_loss, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

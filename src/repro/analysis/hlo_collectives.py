@@ -1,0 +1,153 @@
+"""Parse collective ops (+ bytes) out of lowered/compiled HLO text.
+
+cost_analysis does not expose collective bytes, and collectives sit inside
+while-loop bodies for scanned layers — so we (1) regex every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction with its result shape, (2) recover each while loop's trip count
+from its condition computation (compare against a constant), and (3) multiply
+body collectives by trip count.
+
+Bytes convention (documented in EXPERIMENTS.md): per-op moved bytes =
+result-buffer bytes (all-gather / all-to-all / permute) or operand bytes
+(all-reduce: counted twice for the reduce+broadcast phases, reduce-scatter:
+operand bytes), divided later by chip count for the per-link roofline term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if ("{" in line and "->" in line
+                and (line.startswith("%") or line.startswith("ENTRY")
+                     or not line.startswith(" "))):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+def _while_info(comps: Dict[str, List[str]]) -> List[Tuple[str, str, int]]:
+    """List of (body_comp, cond_comp, trip_count or 1)."""
+    out = []
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+            body = re.search(r"body=%?([\w\.\-]+)", ln)
+            if not (cond and body):
+                continue
+            trip = _trip_count(comps.get(cond.group(1), []))
+            out.append((body.group(1), cond.group(1), trip))
+    return out
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    # look for compare(..., constant) with the bound; constants look like
+    #   %constant.5 = s32[] constant(26)
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\-?\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" not in ln:
+            continue
+        args = re.search(r"compare\(([^)]*)\)", ln)
+        if not args:
+            continue
+        for a in args.group(1).split(","):
+            a = a.strip().lstrip("%")
+            a = a.split(" ")[-1].lstrip("%")
+            if a in consts and consts[a] > 0:
+                return consts[a]
+    if len(consts) == 1:
+        v = next(iter(consts.values()))
+        if v > 0:
+            return v
+    return 1
+
+
+def _op_bytes(kind: str, line: str) -> int:
+    head = line.split("=", 1)
+    if len(head) < 2:
+        return 0
+    rhs = head[1]
+    result = rhs.split(kind)[0]
+    b = _shape_bytes(result)
+    if kind == "all-reduce":
+        return 2 * b
+    return b
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Total collective bytes (loop-trip-count aware) per collective kind."""
+    comps = _split_computations(hlo)
+    whiles = _while_info(comps)
+    mult: Dict[str, int] = defaultdict(lambda: 1)
+    # nested whiles: propagate multipliers breadth-first (bodies may contain
+    # further whiles; iterate to fixpoint over a few rounds)
+    for _ in range(4):
+        for body, cond, trip in whiles:
+            parent = 1
+            for name, lines in comps.items():
+                for ln in lines:
+                    if f"body=%{body}" in ln or f"body={body}" in ln:
+                        parent = mult[name]
+                        break
+            mult[body] = parent * trip
+
+    totals: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for name, lines in comps.items():
+        m = mult[name]
+        for ln in lines:
+            for kind in COLLECTIVES:
+                if f" {kind}(" in ln or f"= {kind}" in ln or f"{kind}(" in ln.split("=")[-1][:40]:
+                    totals[kind] += m * _op_bytes(kind, ln)
+                    counts[f"n_{kind}"] += m
+                    break
+    out = dict(totals)
+    out.update(counts)
+    out["total_bytes"] = float(sum(totals.values()))
+    return out

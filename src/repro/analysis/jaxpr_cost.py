@@ -1,0 +1,156 @@
+"""Scan-aware analytic cost model over jaxprs.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified in this
+container: 2-layer and 8-layer scanned models report identical FLOPs), so for
+scan-over-layers models it undercounts by ~n_layers. This walker recurses
+into scan bodies and multiplies by trip count, giving exact dot FLOPs and a
+bytes proxy:
+
+  flops: dot_general = 2*M*N*K; elementwise/reduce ops = 1/elem; layout ops = 0
+  bytes (two bounds):
+    bytes_min — perfectly-fused traffic: dot_general inputs+outputs,
+                gather/scatter/dynamic-slice outputs (params, activations,
+                KV-cache movement); elementwise assumed fused.
+    bytes     — unfused upper bound: every eqn's outputs as well.
+  The roofline memory term uses bytes_min (a roofline is the best case).
+
+EXPERIMENTS.md §Roofline reports both this and raw cost_analysis numbers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import numpy as np
+
+LAYOUT_PRIMS = {
+    "reshape", "transpose", "broadcast_in_dim", "squeeze", "slice",
+    "concatenate", "rev", "pad", "copy", "convert_element_type",
+    "bitcast_convert_type", "stop_gradient", "device_put", "sharding_constraint",
+}
+ZERO_PRIMS = {"iota", "eq", "ne", "ge", "gt", "le", "lt", "and", "or", "not",
+              "select_n", "sign", "is_finite", "argmax", "argmin"}
+TRANSCENDENTAL = {"exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                  "sin", "cos", "pow", "log1p", "expm1", "cbrt"}
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _bytes(aval) -> int:
+    return _size(aval) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> int:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = 1
+    for d in lc:
+        k *= lhs.shape[d]
+    return 2 * _size(out) * k
+
+
+def analyze_jaxpr(jaxpr, mult: int = 1, acc: Dict[str, float] = None):
+    """Returns dict(flops=..., bytes=..., bytes_min=..., bytes_fused=...)."""
+    if acc is None:
+        acc = {"flops": 0.0, "bytes": 0.0, "bytes_min": 0.0,
+               "bytes_fused": 0.0}
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            length = eqn.params["length"]
+            analyze_jaxpr(eqn.params["jaxpr"], mult * length, acc)
+            continue
+        if name == "while":
+            # we never emit unbounded whiles; count body once if present
+            analyze_jaxpr(eqn.params["body_jaxpr"], mult, acc)
+            continue
+        if name == "cond":
+            branches = eqn.params["branches"]
+            sub = [analyze_jaxpr(b, mult) for b in branches]
+            acc["flops"] += max(s["flops"] for s in sub)
+            acc["bytes"] += max(s["bytes"] for s in sub)
+            continue
+        sub_jaxpr = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+        if sub_jaxpr is not None:   # pjit / remat / custom_* / closed_call
+            analyze_jaxpr(sub_jaxpr, mult, acc)
+            continue
+        if name in LAYOUT_PRIMS or name in ZERO_PRIMS:
+            continue
+        out_elems = sum(_size(v.aval) for v in eqn.outvars)
+        out_bytes = sum(_bytes(v.aval) for v in eqn.outvars)
+        if name == "dot_general":
+            acc["flops"] += mult * _dot_flops(eqn)
+            in_bytes = [_bytes(v.aval) for v in eqn.invars]
+            moved = out_bytes + sum(in_bytes)
+            acc["bytes"] += mult * moved
+            acc["bytes_min"] += mult * moved
+            # flash-fused accounting: a "score-like" tensor is a dot output
+            # much larger than both operands (q@k^T), and a "prob-like"
+            # input is much larger than the dot's output (probs@v) — both
+            # stay in VMEM inside the flash kernel.
+            fused = out_bytes if out_bytes <= 4 * max(in_bytes) else 0
+            fused += sum(b for b in in_bytes
+                         if b <= 4 * max(out_bytes, min(in_bytes)))
+            acc["bytes_fused"] += mult * fused
+        elif name in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "dynamic_slice", "dynamic_update_slice", "take"):
+            acc["bytes"] += mult * out_bytes
+            acc["bytes_min"] += mult * out_bytes
+            acc["bytes_fused"] += mult * out_bytes
+        elif name in TRANSCENDENTAL:
+            acc["flops"] += mult * out_elems  # count 1/elem (roofline proxy)
+            acc["bytes"] += mult * out_bytes
+        else:
+            acc["flops"] += mult * out_elems
+            acc["bytes"] += mult * out_bytes
+    return acc
+
+
+def analyze_fn(fn, *args, **kwargs) -> Dict[str, float]:
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return analyze_jaxpr(jaxpr)
+
+
+def human(x: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P", "E"):
+        if abs(x) < 1000:
+            return f"{x:.3g}{unit}"
+        x /= 1000
+    return f"{x:.3g}Z"
+
+
+def analyze_jaxpr_by_op(jaxpr, mult: int = 1, acc=None):
+    """Like analyze_jaxpr but keyed by primitive name — used to find which
+    ops dominate a roofline term before picking the next perf iteration."""
+    if acc is None:
+        acc = {}
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            analyze_jaxpr_by_op(eqn.params["jaxpr"],
+                                mult * eqn.params["length"], acc)
+            continue
+        sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr") \
+            or eqn.params.get("body_jaxpr")
+        if sub is not None:
+            analyze_jaxpr_by_op(sub, mult, acc)
+            continue
+        if name in LAYOUT_PRIMS or name in ZERO_PRIMS:
+            continue
+        out_bytes = sum(_bytes(v.aval) for v in eqn.outvars)
+        d = acc.setdefault(name, {"flops": 0.0, "bytes_min": 0.0, "count": 0})
+        d["count"] += mult
+        if name == "dot_general":
+            d["flops"] += mult * _dot_flops(eqn)
+            d["bytes_min"] += mult * (
+                out_bytes + sum(_bytes(v.aval) for v in eqn.invars))
+        elif name in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "dynamic_slice", "dynamic_update_slice", "take"):
+            d["bytes_min"] += mult * out_bytes
+    return acc

@@ -1,0 +1,66 @@
+"""Checkpointing: flattened-pytree .npz files (no orbax in this env).
+
+Path-keyed so restores are structure-checked; works for model params,
+optimizer state, and the A2C agent alike. Sharded arrays are gathered to
+host before save (fine at the sizes we train here; a production TPU run
+would write per-shard files — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    name: str = "state") -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"{name}_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str, name: str = "state") -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1))
+             for f in os.listdir(ckpt_dir)
+             if (m := re.match(rf"{name}_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
+                       name: str = "state") -> Any:
+    path = os.path.join(ckpt_dir, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    treedef = leaves_with_path[1]
+    out = []
+    for path_k, leaf in leaves_with_path[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

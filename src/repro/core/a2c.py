@@ -1,0 +1,204 @@
+"""Advantage Actor-Critic (A2C) agent — paper Sec. II-C/D, pure JAX.
+
+Networks follow the paper: the critic has two fully connected layers of
+512 and 256 features; the actor adapts the Multi-Discrete action structure
+with an extra *shared* 128-wide layer per UAV device feeding the (version,
+cut-point) logit pairs.
+
+Training is episodic ("at the end of each episode, both networks' weights
+undergo updates with a batch of experienced transitions"): one jitted
+``train_episode`` rolls the env for ``episode_len`` slots with lax.scan,
+then applies a batched A2C update (n-step discounted returns, advantage
+baseline, entropy bonus) with AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import (EnvConfig, ProfileTables, env_reset, env_step,
+                            observe)
+from repro.models import params as pp
+from repro.models.params import P
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class A2CConfig:
+    gamma: float = 0.95
+    lr: float = 7e-4
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    episodes: int = 300
+    hidden1: int = 512      # paper
+    hidden2: int = 256      # paper
+    uav_head: int = 128     # paper: shared per-UAV layer
+
+
+def plan_agent(cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig):
+    n = cfg.n_uavs
+    obs = n * cfg.obs_dim_per_uav
+    V, K = tables.n_versions, tables.n_cuts
+    h1, h2, hu = ac.hidden1, ac.hidden2, ac.uav_head
+    dense = lambda i, o: {"w": P((i, o), (None, None)),
+                          "b": P((o,), (None,), "zeros")}
+    per_uav = lambda i, o: {"w": P((n, i, o), (None, None, None)),
+                            "b": P((n, o), (None, None), "zeros")}
+    return {
+        "actor": {"l1": dense(obs, h1), "l2": dense(h1, h2),
+                  "uav": per_uav(h2, hu),
+                  "ver": per_uav(hu, V), "cut": per_uav(hu, K)},
+        "critic": {"l1": dense(obs, h1), "l2": dense(h1, h2),
+                   "out": dense(h2, 1)},
+    }
+
+
+def init_agent(cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig, rng):
+    return pp.materialize(plan_agent(cfg, tables, ac), rng,
+                          jnp.dtype("float32"))
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def actor_apply(params, obs_flat):
+    """obs_flat: (obs_total,) -> logits_v (n, V), logits_c (n, K)."""
+    a = params["actor"]
+    h = jax.nn.relu(_dense(a["l1"], obs_flat))
+    h = jax.nn.relu(_dense(a["l2"], h))
+    hu = jax.nn.relu(jnp.einsum("i,nio->no", h, a["uav"]["w"])
+                     + a["uav"]["b"])                       # (n, hu)
+    lv = jnp.einsum("no,nov->nv", hu, a["ver"]["w"]) + a["ver"]["b"]
+    lc = jnp.einsum("no,nok->nk", hu, a["cut"]["w"]) + a["cut"]["b"]
+    return lv, lc
+
+
+def critic_apply(params, obs_flat):
+    c = params["critic"]
+    h = jax.nn.relu(_dense(c["l1"], obs_flat))
+    h = jax.nn.relu(_dense(c["l2"], h))
+    return _dense(c["out"], h)[0]
+
+
+def _mask_logits(logits, valid):
+    return jnp.where(valid > 0, logits, -1e9)
+
+
+def sample_actions(params, obs_flat, valid_v, rng):
+    lv, lc = actor_apply(params, obs_flat)
+    lv = _mask_logits(lv, valid_v)
+    k1, k2 = jax.random.split(rng)
+    av = jax.random.categorical(k1, lv, axis=-1)
+    ac_ = jax.random.categorical(k2, lc, axis=-1)
+    return jnp.stack([av, ac_], axis=-1).astype(jnp.int32)
+
+
+def greedy_actions(params, obs_flat, valid_v):
+    lv, lc = actor_apply(params, obs_flat)
+    lv = _mask_logits(lv, valid_v)
+    return jnp.stack([jnp.argmax(lv, -1), jnp.argmax(lc, -1)],
+                     axis=-1).astype(jnp.int32)
+
+
+def _logp_entropy(params, obs_flat, actions, valid_v):
+    lv, lc = actor_apply(params, obs_flat)
+    lv = _mask_logits(lv, valid_v)
+    logp_v = jax.nn.log_softmax(lv, -1)
+    logp_c = jax.nn.log_softmax(lc, -1)
+    lp = (jnp.take_along_axis(logp_v, actions[:, :1], -1)[:, 0]
+          + jnp.take_along_axis(logp_c, actions[:, 1:2], -1)[:, 0])
+    ent = (-jnp.sum(jnp.exp(logp_v) * logp_v, -1)
+           - jnp.sum(jnp.exp(logp_c) * logp_c, -1))
+    return jnp.sum(lp), jnp.sum(ent)
+
+
+def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
+                       ac: A2CConfig, model_ids=None):
+    """Returns jitted (params, opt_state, rng) -> (params, opt_state, stats)."""
+    opt = AdamWConfig(lr=ac.lr, weight_decay=0.0, warmup_steps=0,
+                      total_steps=ac.episodes, grad_clip=1.0,
+                      min_lr_ratio=1.0)
+    n = env_cfg.n_uavs
+    valid_rows = None  # computed per model assignment below
+
+    def valid_v(state):
+        return tables.version_valid[state["model_id"]]   # (n, V)
+
+    def rollout(params, state0, rng):
+        def step(carry, k):
+            state = carry
+            obs = observe(env_cfg, tables, state).reshape(-1)
+            actions = sample_actions(params, obs, valid_v(state), k)
+            k_env = jax.random.fold_in(k, 1)
+            state2, r, info = env_step(env_cfg, tables, state, actions, k_env)
+            out = {"obs": obs, "actions": actions, "reward": r,
+                   "valid": valid_v(state), "alive": info["alive"],
+                   "battery": info["battery"]}
+            return state2, out
+        keys = jax.random.split(rng, env_cfg.episode_len)
+        state_T, traj = jax.lax.scan(step, state0, keys)
+        return state_T, traj
+
+    def returns_from(traj, bootstrap, gamma):
+        def back(carry, r):
+            g = r + gamma * carry
+            return g, g
+        _, rets = jax.lax.scan(back, bootstrap, traj["reward"], reverse=True)
+        return rets
+
+    def loss_fn(params, traj, rets):
+        def per_step(obs, actions, valid):
+            lp, ent = _logp_entropy(params, obs, actions, valid)
+            v = critic_apply(params, obs)
+            return lp, ent, v
+        lp, ent, values = jax.vmap(per_step)(
+            traj["obs"], traj["actions"], traj["valid"])
+        adv = rets - values
+        adv_n = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-6)
+        actor_loss = -jnp.mean(lp * jax.lax.stop_gradient(adv_n))
+        critic_loss = 0.5 * jnp.mean(jnp.square(adv))
+        ent_mean = jnp.mean(ent) / n
+        loss = (actor_loss + ac.value_coef * critic_loss
+                - ac.entropy_coef * jnp.mean(ent))
+        return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss,
+                      "entropy": ent_mean}
+
+    @jax.jit
+    def train_episode(params, opt_state, rng):
+        k0, k1, k2 = jax.random.split(rng, 3)
+        state0 = env_reset(env_cfg, tables, k0, model_ids=model_ids)
+        state_T, traj = rollout(params, state0, k1)
+        obs_T = observe(env_cfg, tables, state_T).reshape(-1)
+        bootstrap = critic_apply(params, obs_T)
+        rets = returns_from(traj, bootstrap, ac.gamma)
+        (loss, stats), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, traj, rets)
+        params, opt_state, om = adamw_update(opt, params, grads, opt_state)
+        stats = dict(stats, loss=loss,
+                     episode_reward=jnp.sum(traj["reward"]),
+                     mean_reward=jnp.mean(traj["reward"]),
+                     final_battery=jnp.mean(traj["battery"][-1]),
+                     grad_norm=om["grad_norm"])
+        return params, opt_state, stats
+
+    return train_episode
+
+
+def train(env_cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig,
+          rng, model_ids=None, log_every: int = 0):
+    params = init_agent(env_cfg, tables, ac, rng)
+    opt_state = adamw_init(params)
+    step = make_train_episode(env_cfg, tables, ac, model_ids=model_ids)
+    history = []
+    for ep in range(ac.episodes):
+        rng, k = jax.random.split(rng)
+        params, opt_state, stats = step(params, opt_state, k)
+        history.append({k2: float(v) for k2, v in stats.items()})
+        if log_every and (ep + 1) % log_every == 0:
+            print(f"ep {ep+1:4d} reward={history[-1]['mean_reward']:+.4f} "
+                  f"loss={history[-1]['loss']:+.4f}", flush=True)
+    return params, history

@@ -1,0 +1,66 @@
+"""Baseline execution-profile policies the paper implicitly compares
+against: device-only, full-offload, random, and a per-step greedy oracle.
+
+The greedy oracle enumerates every (version, cut) pair per UAV under the
+*current* state and picks the per-UAV reward argmax — since Eq. 8 averages
+a per-UAV score, per-UAV argmax is the per-step optimum (the RL agent can
+only beat it through multi-step battery/queue effects).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import EnvConfig, ProfileTables, action_costs
+
+
+def device_only(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
+    """Lightweight version, run everything locally (last cut)."""
+    n = cfg.n_uavs
+    return jnp.stack([jnp.zeros((n,), jnp.int32),
+                      jnp.full((n,), tables.n_cuts - 1, jnp.int32)], -1)
+
+
+def full_offload(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
+    """Heavy version, cut as early as possible."""
+    n = cfg.n_uavs
+    j = (tables.version_valid[state["model_id"]].sum(-1) - 1).astype(jnp.int32)
+    return jnp.stack([j, jnp.zeros((n,), jnp.int32)], -1)
+
+
+def random_policy(cfg: EnvConfig, tables: ProfileTables, state, rng):
+    n = cfg.n_uavs
+    k1, k2 = jax.random.split(rng)
+    nv = tables.version_valid[state["model_id"]].sum(-1).astype(jnp.int32)
+    j = jax.random.randint(k1, (n,), 0, tables.n_versions) % nv
+    k = jax.random.randint(k2, (n,), 0, tables.n_cuts)
+    return jnp.stack([j, k], -1).astype(jnp.int32)
+
+
+def greedy_oracle(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
+    """Per-step per-UAV reward argmax over all (j, k)."""
+    n = cfg.n_uavs
+    V, K = tables.n_versions, tables.n_cuts
+    w = cfg.weights
+
+    jj, kk = jnp.meshgrid(jnp.arange(V), jnp.arange(K), indexing="ij")
+    pairs = jnp.stack([jj.ravel(), kk.ravel()], -1).astype(jnp.int32)  # (VK,2)
+
+    def score(pair):
+        actions = jnp.tile(pair[None], (n, 1))
+        acc_s, lat_s, en_s, _, _ = action_costs(cfg, tables, state, actions)
+        valid = tables.version_valid[state["model_id"], pair[0]]
+        s = w.w_acc * acc_s + w.w_lat * lat_s + w.w_energy * en_s
+        return jnp.where(valid > 0, s, -jnp.inf)
+
+    scores = jax.vmap(score)(pairs)          # (VK, n)
+    best = jnp.argmax(scores, axis=0)        # (n,)
+    return pairs[best]
+
+
+POLICIES = {
+    "device_only": device_only,
+    "full_offload": full_offload,
+    "random": random_policy,
+    "greedy_oracle": greedy_oracle,
+}

@@ -1,0 +1,137 @@
+"""EdgeRL controller: the centralized decision-maker (paper Sec. II-D).
+
+Wires profiles -> env -> A2C and exposes:
+  - ``make_paper_env``: the faithful testbed (VGG/ResNet/DenseNet on
+    Jetson-TX2-class UAVs + PowerEdge-class edge server).
+  - ``make_tpu_env``: the TPU adaptation (assigned transformer archs;
+    device/server = head/tail submesh with roofline-derived throughputs,
+    ICI link as the uplink) — see DESIGN.md §2.
+  - ``train_agent`` / ``evaluate_policy`` / ``decide``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import a2c as A2C
+from repro.core.env import (EnvConfig, ProfileTables, build_tables,
+                            env_reset, env_step, observe)
+from repro.core.latency import LatencyParams
+from repro.core.energy import DevicePower
+from repro.core.profiles import paper_profiles, transformer_profile
+from repro.core.reward import RewardWeights
+
+
+def make_paper_env(weights: RewardWeights = RewardWeights(),
+                   **env_kw) -> Tuple[EnvConfig, ProfileTables]:
+    profs = paper_profiles()
+    tables = build_tables([profs["vgg"], profs["resnet"], profs["densenet"]])
+    cfg = EnvConfig(n_uavs=3, weights=weights.normalized(), **env_kw)
+    return cfg, tables
+
+
+# TPU v5e submesh regime: "device" = small head submesh (8 chips),
+# "server" = shared tail submesh (64 chips, queued), link = ICI.
+_TPU_LATENCY = LatencyParams(
+    device_flops=8 * 197e12 * 0.4,      # 8 chips at 40% MFU
+    server_flops=64 * 197e12 * 0.4,
+    job_service_s=0.01,
+    bw_min_bps=8 * 50e9 * 8 * 0.25,     # congested ICI share
+    bw_max_bps=8 * 50e9 * 8,            # 8 links x 50 GB/s
+)
+_TPU_POWER = DevicePower(
+    p_forward=0.0, p_vertical=0.0, p_rotate=0.0, p_hover=0.0,   # no kinetics
+    p_compute=8 * 200.0,                # ~200 W per v5e chip
+    p_tx_min=5.0, p_tx_max=20.0,        # ICI/DCN interface power proxy
+    battery_wh=1e9,                     # pods don't run on batteries
+)
+
+
+def make_tpu_env(arch_names: Sequence[str],
+                 weights: RewardWeights = RewardWeights(),
+                 seq_len: int = 2048,
+                 **env_kw) -> Tuple[EnvConfig, ProfileTables]:
+    from repro.configs import get_config
+
+    profs = [transformer_profile(get_config(a), seq_len=seq_len)
+             for a in arch_names]
+    tables = build_tables(profs)
+    cfg = EnvConfig(n_uavs=len(arch_names), latency=_TPU_LATENCY,
+                    power=_TPU_POWER, weights=weights.normalized(),
+                    frames_per_slot=1000.0,   # request batches per slot
+                    **env_kw)
+    return cfg, tables
+
+
+def train_agent(cfg: EnvConfig, tables: ProfileTables,
+                ac: A2C.A2CConfig = A2C.A2CConfig(), seed: int = 0,
+                log_every: int = 0):
+    return A2C.train(cfg, tables, ac, jax.random.key(seed),
+                     log_every=log_every)
+
+
+def decide(params, cfg: EnvConfig, tables: ProfileTables, state):
+    """Greedy execution-profile decision for the current state."""
+    obs = observe(cfg, tables, state).reshape(-1)
+    valid = tables.version_valid[state["model_id"]]
+    return A2C.greedy_actions(params, obs, valid)
+
+
+def agent_policy(params):
+    def policy(cfg, tables, state, rng=None):
+        return decide(params, cfg, tables, state)
+    return policy
+
+
+def evaluate_policy(cfg: EnvConfig, tables: ProfileTables,
+                    policy: Callable, rng, episodes: int = 5) -> Dict:
+    """Roll a policy; aggregate the paper's reported metrics + the
+    (version, cut) selection histogram (Table II reproduction)."""
+    n = cfg.n_uavs
+    V, K = tables.n_versions, tables.n_cuts
+    hist = np.zeros((tables.n_models, V, K))
+    agg = {k: 0.0 for k in ("reward", "latency", "energy", "acc_score",
+                            "lat_score", "en_score", "alive_slots")}
+    steps = 0
+
+    @jax.jit
+    def one_step(state, k):
+        actions = policy(cfg, tables, state, jax.random.fold_in(k, 7))
+        state2, r, info = env_step(cfg, tables, state, actions,
+                                   jax.random.fold_in(k, 13))
+        return state2, (actions, r, info)
+
+    for ep in range(episodes):
+        rng, k0 = jax.random.split(rng)
+        state = env_reset(cfg, tables, k0)
+        for t in range(cfg.episode_len):
+            rng, k = jax.random.split(rng)
+            state, (actions, r, info) = one_step(state, k)
+            a_np = np.asarray(actions)
+            m_np = np.asarray(state["model_id"])
+            alive = np.asarray(info["alive"])
+            for u in range(n):
+                if alive[u]:
+                    hist[m_np[u], a_np[u, 0], a_np[u, 1]] += 1
+            agg["reward"] += float(r)
+            agg["latency"] += float(jnp.mean(info["t_total"]))
+            agg["energy"] += float(jnp.mean(info["e_infer"]))
+            agg["acc_score"] += float(jnp.mean(info["acc_s"]))
+            agg["lat_score"] += float(jnp.mean(info["lat_s"]))
+            agg["en_score"] += float(jnp.mean(info["en_s"]))
+            agg["alive_slots"] += float(jnp.sum(info["alive"]))
+            steps += 1
+    out = {k: v / steps for k, v in agg.items()}
+    out["selection_hist"] = hist
+    # modal (version, cut index) per model — Table II analogue
+    modal = {}
+    for mi, name in enumerate(tables.names):
+        if hist[mi].sum() > 0:
+            j, c = np.unravel_index(np.argmax(hist[mi]), hist[mi].shape)
+            modal[name] = (int(j), int(c))
+    out["modal_selection"] = modal
+    return out

@@ -1,0 +1,207 @@
+"""EdgeEnv: the paper's ad-hoc edge MDP as a pure-JAX environment.
+
+State (Eq. 6) per UAV: battery level b in [0,10], task availability
+alpha in {0,1}, transmit power P_tx, model id m, and the activity mix
+(forward F, vertical V, rotation R) over the next slot. Shared state:
+per-UAV link bandwidth and the edge-server queue length (Poisson side
+workload -> Eq. 4 queue term).
+
+Action (Eq. 7) per UAV: (version j, cut-point index l) into the profile
+tables. ``env_step`` is jit/scan-friendly: all dynamics are jnp ops on a
+dict-of-arrays state, so whole A2C episodes run inside one jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as en
+from repro.core import latency as lat
+from repro.core import reward as rw
+from repro.core.profiles import ModelProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    n_uavs: int = 3
+    slot_seconds: float = 30.0        # paper: delta = 30 s
+    episode_len: int = 96             # slots per episode (battery-bounded)
+    frames_per_slot: float = 30.0     # 1 fps reconnaissance video
+    queue_arrival_rate: float = 4.0   # Poisson jobs/slot (server side work)
+    queue_service_per_slot: float = 5.0
+    task_prob: float = 0.9
+    # High activity profile (paper Sec. III-A): 80% fwd, 10% vert, 10% rot
+    activity: Tuple[float, float, float] = (0.8, 0.1, 0.1)
+    activity_jitter: float = 0.05
+    power: en.DevicePower = dataclasses.field(default_factory=en.DevicePower)
+    latency: lat.LatencyParams = dataclasses.field(
+        default_factory=lat.LatencyParams)
+    weights: rw.RewardWeights = dataclasses.field(
+        default_factory=rw.RewardWeights)
+
+    @property
+    def obs_dim_per_uav(self) -> int:
+        return 9
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileTables:
+    """Dense (M, V, K) lookup tables built from ModelProfiles."""
+    head_flops: jnp.ndarray      # (M, V, K)
+    tail_flops: jnp.ndarray      # (M, V, K)
+    cut_bytes: jnp.ndarray       # (M, V, K)
+    acc: jnp.ndarray             # (M, V)
+    full_flops: jnp.ndarray      # (M, V)  all-local FLOPs
+    version_valid: jnp.ndarray   # (M, V) 1.0 if version exists
+    n_versions: int
+    n_cuts: int
+    names: Tuple[str, ...]
+
+    @property
+    def n_models(self) -> int:
+        return self.head_flops.shape[0]
+
+
+def build_tables(profiles: Sequence[ModelProfile]) -> ProfileTables:
+    V = max(len(p.versions) for p in profiles)
+    K = max(len(v.cut_points) for p in profiles for v in p.versions)
+    M = len(profiles)
+    head = np.zeros((M, V, K))
+    tail = np.zeros((M, V, K))
+    bts = np.zeros((M, V, K))
+    acc = np.zeros((M, V))
+    full = np.zeros((M, V))
+    valid = np.zeros((M, V))
+    for mi, p in enumerate(profiles):
+        for vi in range(V):
+            v = p.versions[min(vi, len(p.versions) - 1)]
+            valid[mi, vi] = float(vi < len(p.versions))
+            acc[mi, vi] = v.accuracy
+            full[mi, vi] = v.total_flops
+            cuts = list(v.cut_points) + [v.cut_points[-1]] * K
+            for ki in range(K):
+                c = cuts[ki]
+                head[mi, vi, ki] = v.head_flops(c)
+                tail[mi, vi, ki] = v.tail_flops(c)
+                bts[mi, vi, ki] = v.cut_bytes(c)
+    return ProfileTables(
+        head_flops=jnp.asarray(head), tail_flops=jnp.asarray(tail),
+        cut_bytes=jnp.asarray(bts), acc=jnp.asarray(acc),
+        full_flops=jnp.asarray(full), version_valid=jnp.asarray(valid),
+        n_versions=V, n_cuts=K, names=tuple(p.name for p in profiles))
+
+
+def env_reset(cfg: EnvConfig, tables: ProfileTables, rng,
+              model_ids=None) -> Dict:
+    n = cfg.n_uavs
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if model_ids is None:
+        model_ids = jnp.arange(n, dtype=jnp.int32) % tables.n_models
+    bw = jax.random.uniform(k1, (n,), minval=cfg.latency.bw_min_bps,
+                            maxval=cfg.latency.bw_max_bps)
+    ptx = jax.random.uniform(k2, (n,), minval=cfg.power.p_tx_min,
+                             maxval=cfg.power.p_tx_max)
+    return {
+        "battery_j": jnp.full((n,), cfg.power.battery_j),
+        "task": jnp.ones((n,), jnp.float32),
+        "p_tx": ptx,
+        "model_id": model_ids,
+        "activity": jnp.tile(jnp.asarray(cfg.activity)[None], (n, 1)),
+        "bandwidth": bw,
+        "queue": jnp.float32(0.0),
+        "t": jnp.int32(0),
+    }
+
+
+def observe(cfg: EnvConfig, tables: ProfileTables, state) -> jnp.ndarray:
+    """(n_uavs, obs_dim_per_uav) normalized observation (Eq. 6 +
+    bandwidth/queue, which the controller measures)."""
+    p, l = cfg.power, cfg.latency
+    b = state["battery_j"] / p.battery_j * 10.0
+    feats = jnp.stack([
+        b / 10.0,
+        state["task"],
+        (state["p_tx"] - p.p_tx_min) / (p.p_tx_max - p.p_tx_min),
+        state["model_id"].astype(jnp.float32) / max(tables.n_models - 1, 1),
+        state["activity"][:, 0], state["activity"][:, 1],
+        state["activity"][:, 2],
+        (state["bandwidth"] - l.bw_min_bps) / (l.bw_max_bps - l.bw_min_bps),
+        jnp.broadcast_to(state["queue"] / 20.0, state["task"].shape),
+    ], axis=-1)
+    return feats
+
+
+def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
+    """Per-UAV (acc_score, lat_score, energy_score, t_total, e_infer) for
+    actions (n, 2) = (version j, cut index l)."""
+    m = state["model_id"]
+    j, k = actions[:, 0], actions[:, 1]
+    head = tables.head_flops[m, j, k]
+    tail = tables.tail_flops[m, j, k]
+    nbytes = tables.cut_bytes[m, j, k]
+    acc = tables.acc[m, j]
+    full = tables.full_flops[m, j]
+
+    lp, pw, w = cfg.latency, cfg.power, cfg.weights
+    t_total = lat.total_time(lp, head, tail, nbytes, state["bandwidth"],
+                             state["queue"])
+    t_full_local = lat.local_time(lp, full)
+    e_comp = en.compute_energy(pw, lat.local_time(lp, head))
+    e_trans = en.transmit_energy(state["p_tx"], state["bandwidth"], nbytes)
+    e_infer = e_comp + e_trans
+    e_full_local = en.compute_energy(pw, t_full_local)
+
+    acc_s = rw.accuracy_score(w, acc)
+    lat_s = rw.latency_score(t_total, t_full_local)
+    en_s = rw.energy_score(e_infer, e_full_local)
+    return acc_s, lat_s, en_s, t_total, e_infer
+
+
+def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng):
+    """One delta-slot. Returns (new_state, reward, info)."""
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    acc_s, lat_s, en_s, t_total, e_infer = action_costs(
+        cfg, tables, state, actions)
+
+    alive = (state["battery_j"] > 0).astype(jnp.float32)
+    active = alive * state["task"]
+    r = rw.reward(cfg.weights, acc_s, lat_s, en_s, mask=active)
+
+    # energy drain: kinetics (always, while alive) + inference (if active)
+    kin_p = en.kinetic_power(cfg.power, state["activity"][:, 0],
+                             state["activity"][:, 1], state["activity"][:, 2])
+    e_kin = kin_p * cfg.slot_seconds
+    drain = alive * (e_kin + active * e_infer * cfg.frames_per_slot)
+    battery = jnp.maximum(state["battery_j"] - drain, 0.0)
+
+    # dynamics: bandwidth random walk, queue M/M/1-ish, task Bernoulli
+    lpar = cfg.latency
+    bw = jnp.clip(state["bandwidth"]
+                  * jnp.exp(jax.random.normal(k1, state["bandwidth"].shape)
+                            * 0.15),
+                  lpar.bw_min_bps, lpar.bw_max_bps)
+    arrivals = jax.random.poisson(k2, cfg.queue_arrival_rate).astype(
+        jnp.float32)
+    queue = jnp.maximum(state["queue"] + arrivals
+                        - cfg.queue_service_per_slot, 0.0)
+    task = jax.random.bernoulli(k3, cfg.task_prob,
+                                state["task"].shape).astype(jnp.float32)
+    ptx = jnp.clip(state["p_tx"]
+                   + jax.random.normal(k4, state["p_tx"].shape) * 0.05,
+                   cfg.power.p_tx_min, cfg.power.p_tx_max)
+    act = jnp.clip(state["activity"]
+                   + jax.random.normal(k5, state["activity"].shape)
+                   * cfg.activity_jitter, 0.0, 1.0)
+    act = act / jnp.maximum(jnp.sum(act, -1, keepdims=True), 1.0)
+
+    new_state = dict(state, battery_j=battery, bandwidth=bw, queue=queue,
+                     task=task, p_tx=ptx, activity=act, t=state["t"] + 1)
+    done = jnp.all(battery <= 0.0)
+    info = {"t_total": t_total, "e_infer": e_infer, "acc_s": acc_s,
+            "lat_s": lat_s, "en_s": en_s, "alive": alive, "done": done,
+            "battery": battery}
+    return new_state, r, info

@@ -1,0 +1,123 @@
+"""PPO agent (beyond-paper ablation).
+
+The paper chooses A2C "for its efficiency and effectiveness"; PPO is the
+natural modern baseline to test that choice. Reuses the A2C networks and
+rollout machinery; adds clipped-surrogate updates with GAE over multiple
+epochs per episode batch. Compared against A2C in
+``benchmarks.run --only ablation_agents``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.a2c import (A2CConfig, _logp_entropy, actor_apply,
+                            critic_apply, init_agent, sample_actions)
+from repro.core.env import EnvConfig, ProfileTables, env_reset, env_step, observe
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    gamma: float = 0.95
+    lam: float = 0.95           # GAE
+    clip: float = 0.2
+    epochs: int = 4             # surrogate epochs per episode
+    lr: float = 3e-4
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    episodes: int = 300
+    base: A2CConfig = dataclasses.field(default_factory=A2CConfig)
+
+
+def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
+                       pc: PPOConfig, model_ids=None):
+    opt = AdamWConfig(lr=pc.lr, weight_decay=0.0, warmup_steps=0,
+                      total_steps=pc.episodes * pc.epochs, grad_clip=1.0,
+                      min_lr_ratio=1.0)
+    n = env_cfg.n_uavs
+
+    def valid_v(state):
+        return tables.version_valid[state["model_id"]]
+
+    def rollout(params, state0, rng):
+        def step(state, k):
+            obs = observe(env_cfg, tables, state).reshape(-1)
+            valid = valid_v(state)
+            actions = sample_actions(params, obs, valid, k)
+            lp, _ = _logp_entropy(params, obs, actions, valid)
+            v = critic_apply(params, obs)
+            state2, r, info = env_step(env_cfg, tables, state, actions,
+                                       jax.random.fold_in(k, 1))
+            return state2, {"obs": obs, "actions": actions, "reward": r,
+                            "valid": valid, "logp": lp, "value": v}
+        keys = jax.random.split(rng, env_cfg.episode_len)
+        return jax.lax.scan(step, state0, keys)
+
+    def gae(traj, bootstrap):
+        def back(carry, xs):
+            adv_next, v_next = carry
+            r, v = xs
+            delta = r + pc.gamma * v_next - v
+            adv = delta + pc.gamma * pc.lam * adv_next
+            return (adv, v), adv
+        (_, _), advs = jax.lax.scan(back, (jnp.float32(0.0), bootstrap),
+                                    (traj["reward"], traj["value"]),
+                                    reverse=True)
+        return advs, advs + traj["value"]
+
+    def loss_fn(params, traj, advs, rets):
+        def per_step(obs, actions, valid):
+            lp, ent = _logp_entropy(params, obs, actions, valid)
+            return lp, ent, critic_apply(params, obs)
+        lp, ent, values = jax.vmap(per_step)(
+            traj["obs"], traj["actions"], traj["valid"])
+        ratio = jnp.exp(lp - traj["logp"])
+        a_n = (advs - jnp.mean(advs)) / (jnp.std(advs) + 1e-6)
+        surr = jnp.minimum(ratio * a_n,
+                           jnp.clip(ratio, 1 - pc.clip, 1 + pc.clip) * a_n)
+        actor_loss = -jnp.mean(surr)
+        critic_loss = 0.5 * jnp.mean(jnp.square(rets - values))
+        loss = (actor_loss + pc.value_coef * critic_loss
+                - pc.entropy_coef * jnp.mean(ent))
+        return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss}
+
+    @jax.jit
+    def train_episode(params, opt_state, rng):
+        k0, k1 = jax.random.split(rng)
+        state0 = env_reset(env_cfg, tables, k0, model_ids=model_ids)
+        state_T, traj = rollout(params, state0, k1)
+        obs_T = observe(env_cfg, tables, state_T).reshape(-1)
+        advs, rets = gae(traj, critic_apply(params, obs_T))
+
+        def epoch(carry, _):
+            params, opt_state = carry
+            (loss, stats), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, traj, advs, rets)
+            params, opt_state, _ = adamw_update(opt, params, grads, opt_state)
+            return (params, opt_state), loss
+        (params, opt_state), losses = jax.lax.scan(
+            epoch, (params, opt_state), None, length=pc.epochs)
+        return params, opt_state, {
+            "loss": losses[-1], "mean_reward": jnp.mean(traj["reward"]),
+            "episode_reward": jnp.sum(traj["reward"])}
+
+    return train_episode
+
+
+def train(env_cfg: EnvConfig, tables: ProfileTables, pc: PPOConfig, rng,
+          model_ids=None, log_every: int = 0):
+    params = init_agent(env_cfg, tables, pc.base, rng)
+    opt_state = adamw_init(params)
+    step = make_train_episode(env_cfg, tables, pc, model_ids=model_ids)
+    history = []
+    for ep in range(pc.episodes):
+        rng, k = jax.random.split(rng)
+        params, opt_state, stats = step(params, opt_state, k)
+        history.append({k2: float(v) for k2, v in stats.items()})
+        if log_every and (ep + 1) % log_every == 0:
+            print(f"ppo ep {ep+1:4d} "
+                  f"reward={history[-1]['mean_reward']:+.4f}", flush=True)
+    return params, history

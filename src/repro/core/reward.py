@@ -1,0 +1,50 @@
+"""Reward function (paper Eqs. 8-11).
+
+R = mean_k( w1*A + w2*L + w3*E ), sum(w) = 1.
+A: sigmoid-normalized accuracy; L/E: 1 - cost / all-local cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardWeights:
+    w_acc: float = 1 / 3
+    w_lat: float = 1 / 3
+    w_energy: float = 1 / 3
+    # Eq. 9 sigmoid shape
+    p: float = 20.0
+    q: float = 0.72
+
+    def normalized(self) -> "RewardWeights":
+        s = self.w_acc + self.w_lat + self.w_energy
+        return dataclasses.replace(self, w_acc=self.w_acc / s,
+                                   w_lat=self.w_lat / s,
+                                   w_energy=self.w_energy / s)
+
+
+def accuracy_score(w: RewardWeights, acc):
+    """Eq. 9."""
+    return 1.0 / (1.0 + jnp.exp(-w.p * (acc - w.q)))
+
+
+def latency_score(t_total, t_all_local):
+    """Eq. 10."""
+    return 1.0 - t_total / jnp.maximum(t_all_local, 1e-9)
+
+
+def energy_score(e_total, e_all_local):
+    """Eq. 11."""
+    return 1.0 - e_total / jnp.maximum(e_all_local, 1e-9)
+
+
+def reward(w: RewardWeights, acc_s, lat_s, energy_s, mask=None):
+    """Eq. 8: per-UAV weighted sum averaged over (active) UAVs."""
+    r = w.w_acc * acc_s + w.w_lat * lat_s + w.w_energy * energy_s
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(r * mask) / denom
+    return jnp.mean(r)

@@ -1,0 +1,109 @@
+"""Analytic per-block FLOPs for the assigned transformer architectures.
+
+Used by (a) EdgeRL transformer profiles (core/profiles.py) and
+(b) MODEL_FLOPS in the roofline report (analysis/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import ModelConfig
+
+
+def _attn_flops(cfg: ModelConfig, seq_ctx: int) -> float:
+    d, Dh = cfg.d_model, cfg.resolved_head_dim
+    H, HK = cfg.n_heads, cfg.n_kv_heads
+    if cfg.use_mla:
+        qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        proj = 2 * d * H * qd                       # q
+        proj += 2 * d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        proj += 2 * cfg.kv_lora_rank * H * (cfg.qk_nope_head_dim
+                                            + cfg.v_head_dim)
+        proj += 2 * H * cfg.v_head_dim * d          # out
+        score = 2 * H * qd * seq_ctx + 2 * H * cfg.v_head_dim * seq_ctx
+    else:
+        proj = 2 * d * H * Dh + 2 * 2 * d * HK * Dh + 2 * H * Dh * d
+        score = 2 * H * Dh * seq_ctx * 2
+    return proj + score
+
+
+def _mlp_flops(cfg: ModelConfig, d_ff: int) -> float:
+    mats = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+    return 2.0 * mats * cfg.d_model * d_ff
+
+
+def _moe_flops(cfg: ModelConfig) -> float:
+    active = cfg.top_k + cfg.n_shared_experts
+    return 2.0 * 3 * cfg.d_model * cfg.moe_d_ff * active \
+        + 2.0 * cfg.d_model * cfg.n_experts          # router
+
+
+def _ssm_flops(cfg: ModelConfig) -> float:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    f = 2 * d * 2 * di                 # in_proj
+    f += cfg.ssm_conv * di             # conv
+    f += 2 * di * (r + 2 * n)          # x_proj
+    f += 2 * r * di                    # dt_proj
+    f += 6 * di * n                    # scan update + output
+    f += 2 * di * d                    # out_proj
+    return float(f)
+
+
+def _rec_flops(cfg: ModelConfig) -> float:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    f = 2 * d * w * 2                  # two branches
+    f += cfg.ssm_conv * w
+    f += 2 * w * w * 2                 # gates
+    f += 8 * w                         # recurrence
+    f += 2 * w * d                     # out
+    return float(f)
+
+
+def block_flops_per_token(cfg: ModelConfig, seq_ctx: int = None) -> List[float]:
+    """FLOPs per token per block, in layer order."""
+    ctx = seq_ctx if seq_ctx is not None else 2048
+    if cfg.sliding_window:
+        ctx = min(ctx, cfg.sliding_window)
+    out = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind == "ssm":
+            out.append(_ssm_flops(cfg))
+        elif kind == "rec":
+            out.append(_rec_flops(cfg) + _mlp_flops(cfg, cfg.d_ff))
+        elif kind == "xattn":
+            out.append(_attn_flops(cfg, cfg.n_media_tokens)
+                       + _mlp_flops(cfg, cfg.d_ff))
+        elif cfg.enc_dec:
+            # whisper decoder block: self-attn + cross-attn(enc) + mlp
+            out.append(_attn_flops(cfg, ctx)
+                       + _attn_flops(cfg, cfg.encoder_seq)
+                       + _mlp_flops(cfg, cfg.d_ff))
+        else:
+            lctx = min(ctx, cfg.local_window) if cfg.block_pattern else ctx
+            mlp = (_moe_flops(cfg) if (cfg.moe and i >= cfg.first_dense_layers)
+                   else _mlp_flops(cfg, cfg.d_ff if cfg.d_ff else 4 * cfg.d_model))
+            out.append(_attn_flops(cfg, lctx) + mlp)
+    return out
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameter count with only active MoE experts (for 6*N_active*D)."""
+    from repro.models.model import n_params
+    total = float(n_params(cfg))
+    if not cfg.moe:
+        return total
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    expert_params = 3.0 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts \
+        * n_moe_layers
+    active_frac = cfg.top_k / cfg.n_experts
+    return total - expert_params * (1.0 - active_frac)
+
+
+def model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS per roofline spec: 6*N*D train, 2*N*D inference."""
+    n = active_params(cfg)
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: one token per sequence

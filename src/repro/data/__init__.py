@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
+                                 make_train_iterator, shard_batch)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_train_iterator",
+           "shard_batch"]

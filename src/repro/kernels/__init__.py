@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot spots, each with a jit'd wrapper
+(ops.py) and a pure-jnp oracle (ref.py):
+
+  flash_attention — online-softmax attention, GQA + causal + sliding window
+  flash_decode    — single-token ring-cache decode attention (positional mask)
+  mamba_scan      — Mamba-1 selective scan, VMEM-resident state tiles
+  rglru_scan      — RG-LRU diagonal linear recurrence
+
+Set REPRO_USE_PALLAS=interpret (CPU validation) or =tpu (hardware) to route
+the models through the kernels; unset -> pure-jnp reference path.
+"""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels import ops, ref
+
+__all__ = ["flash_attention", "flash_decode", "mamba_scan", "rglru_scan",
+           "ops", "ref"]

@@ -1,0 +1,79 @@
+"""jit'd wrappers dispatching between Pallas kernels and jnp references.
+
+``use_pallas()`` reads REPRO_USE_PALLAS: "interpret" (CPU validation),
+"tpu" (real lowering on hardware), or unset/0 (pure-jnp path — default in
+this CPU container; the models call these wrappers so flipping one env var
+moves the whole stack onto the kernels).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.mamba_scan import mamba_scan as _mamba_scan
+from repro.kernels.rglru_scan import rglru_scan as _rglru_scan
+from repro.kernels import ref
+
+
+def use_pallas() -> Optional[str]:
+    v = os.environ.get("REPRO_USE_PALLAS", "").lower()
+    if v in ("interpret", "tpu"):
+        return v
+    return None
+
+
+def attention_bhsd(q, k, v, *, causal=True, window=None, logit_scale=None):
+    """(B,H,S,D) attention via flash kernel or oracle."""
+    mode = use_pallas()
+    if mode:
+        return _flash(q, k, v, causal=causal, window=window,
+                      logit_scale=logit_scale,
+                      interpret=(mode == "interpret"))
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   logit_scale=logit_scale)
+
+
+def mamba_scan_full(cfg, p, u, dt, Bm, Cm):
+    """Selective scan incl. D-skip. u/dt: (B,S,DI); Bm/Cm: (B,S,N)."""
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    mode = use_pallas()
+    if mode:
+        y, h = _mamba_scan(u.astype(jnp.float32), dt, Bm, Cm, A,
+                           interpret=(mode == "interpret"))
+        y = y + u.astype(jnp.float32) * p["d_skip"][None, None]
+        return y.astype(u.dtype), h
+    from repro.models.ssm import ssm_scan_chunked
+    return ssm_scan_chunked(cfg, p, u)
+
+
+def rglru_scan_full(a, gx):
+    """Diagonal recurrence. a/gx: (B,S,W) f32 -> (h_seq, h_last)."""
+    mode = use_pallas()
+    if mode:
+        return _rglru_scan(a, gx, interpret=(mode == "interpret"))
+    return ref.rglru_scan_ref(a, gx)
+
+
+def decode_attention(q_bhd, k_cache, v_cache, pos, *, window=None,
+                     logit_scale=None):
+    """Single-token ring-cache attention. q: (B,H,Dh); caches (B,HK,C,Dh)."""
+    mode = use_pallas()
+    if mode:
+        return _flash_decode(q_bhd, k_cache, v_cache, pos, window=window,
+                             logit_scale=logit_scale,
+                             interpret=(mode == "interpret"))
+    from repro.models.attention import slot_positions
+    from repro.models.attention_core import plain_attention
+    C = k_cache.shape[2]
+    kv_pos = slot_positions(jnp.asarray(pos, jnp.int32), C)
+    out = plain_attention(
+        q_bhd[:, None], k_cache.transpose(0, 2, 1, 3),
+        v_cache.transpose(0, 2, 1, 3),
+        q_positions=jnp.asarray(pos, jnp.int32).reshape(1),
+        kv_positions=kv_pos, causal=True, window=window,
+        logit_scale=logit_scale)
+    return out[:, 0]

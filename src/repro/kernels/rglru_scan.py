@@ -1,0 +1,71 @@
+"""RG-LRU diagonal linear recurrence as a Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + gx_t, with a/gx precomputed by cheap jnp projections
+(the gates are matmuls XLA already fuses well); the kernel owns the
+memory-bound sequential hot loop, keeping the (bw,) state in VMEM scratch
+across the sequential chunk grid dim.
+
+Layout: a, gx: (B, S, W). grid = (B, W/bw, S/bc).
+Oracle: kernels/ref.py rglru_scan_ref (associative_scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, gx_ref, y_ref, hout_ref, h_scr, *, bc: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        h = (a_ref[0, t].astype(jnp.float32) * h
+             + gx_ref[0, t].astype(jnp.float32))
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bc, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ic == nc - 1)
+    def _finalize():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "bc", "interpret"))
+def rglru_scan(a, gx, *, bw: int = 256, bc: int = 128,
+               interpret: bool = True):
+    """a, gx: (B, S, W) -> (h_seq (B,S,W), h_last (B,W))."""
+    B, S, W = a.shape
+    bw = min(bw, W)
+    bc = min(bc, S)
+    assert W % bw == 0 and S % bc == 0, (W, bw, S, bc)
+    nw, nc = W // bw, S // bc
+
+    kernel = functools.partial(_rglru_kernel, bc=bc, nc=nc)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, bc, bw), lambda b, w, c: (b, c, w)),
+            pl.BlockSpec((1, bc, bw), lambda b, w, c: (b, c, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bc, bw), lambda b, w, c: (b, c, w)),
+            pl.BlockSpec((1, bw), lambda b, w, c: (b, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, gx)
+    return y, h

@@ -1,0 +1,47 @@
+"""Multi-host initialization for real pod deployments.
+
+The dry-run proves the mesh/sharding config with 512 virtual devices in one
+process; on real hardware each host runs this same entrypoint and
+``jax.distributed.initialize`` stitches processes into one global device
+set. Environment contract (set by the scheduler / launch script):
+
+  REPRO_COORDINATOR   host:port of process 0       (e.g. 10.0.0.1:8476)
+  REPRO_NUM_PROCESSES total process count          (e.g. 128 hosts)
+  REPRO_PROCESS_ID    this process's index
+
+On Cloud TPU these fall back to the TPU metadata auto-detection built into
+jax.distributed.initialize(). See launch/run_multipod.sh.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def maybe_initialize_distributed() -> bool:
+    """Initialize multi-process JAX if the env contract is present.
+
+    Returns True when running multi-process. Safe to call on single host
+    (no-op). Must run before any other jax API touches the backend.
+    """
+    coord = os.environ.get("REPRO_COORDINATOR")
+    nproc = os.environ.get("REPRO_NUM_PROCESSES")
+    pid = os.environ.get("REPRO_PROCESS_ID")
+    if coord and nproc and pid:
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=int(nproc),
+            process_id=int(pid),
+        )
+        return True
+    if os.environ.get("REPRO_TPU_AUTODETECT"):
+        jax.distributed.initialize()   # Cloud TPU metadata path
+        return True
+    return False
+
+
+def describe_topology() -> str:
+    return (f"process {jax.process_index()}/{jax.process_count()} "
+            f"local_devices={jax.local_device_count()} "
+            f"global_devices={jax.device_count()}")

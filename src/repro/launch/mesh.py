@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline targets; the container runs CPU)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh with the production axis names (smoke tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, min(n, 1)), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a == "model")
+
+
+def axis_size(mesh, names) -> int:
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n

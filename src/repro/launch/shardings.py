@@ -1,0 +1,93 @@
+"""Logical-axis -> mesh resolution and NamedSharding construction.
+
+Every param / cache / batch leaf carries a tuple of logical axis names
+(see models/params.py). ``resolve_spec`` greedily assigns mesh axes to
+dims left-to-right, honoring divisibility and never reusing a mesh axis
+within one spec — so e.g. mixtral's 8 experts fall back to ff-sharding
+on a 16-way model axis, and batch=1 long-context decode falls through to
+context (cache-sequence) parallelism automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes, model_axes
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh):
+    """logical axis name -> ordered tuple of candidate mesh axes."""
+    model = model_axes(mesh)
+    data = data_axes(mesh)
+    msize = 1
+    for a in model:
+        msize *= mesh.shape[a]
+    return {
+        "vocab": model,
+        # FSDP: weight input dims shard over data (GSPMD all-gathers at use,
+        # reduce-scatters grads) — ZeRO-3 semantics via the same resolver
+        "embed": data if cfg.fsdp else (),
+        "heads": model,
+        "kv_heads": model if cfg.n_kv_heads % msize == 0 else (),
+        "ff": model,
+        "experts": model if (cfg.n_experts and cfg.n_experts % msize == 0) else (),
+        "inner": model,
+        "lru": model,
+        "layers": (),
+        "batch": data,
+        "kv_cache_seq": data,        # context parallelism when batch won't shard
+        "seq": (),
+    }
+
+
+def resolve_spec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                 rules, mesh: Mesh) -> PartitionSpec:
+    used: set = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        want = tuple(rules.get(name, ()) if name is not None else ())
+        # candidate assignments: the full tuple first, then suffix/single axes
+        candidates = [want]
+        if len(want) > 1:
+            candidates += [(a,) for a in want]
+        assigned = None
+        for cand in candidates:
+            if not cand or any(a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= mesh.shape[a]
+            if dim % prod == 0:
+                assigned = cand
+                used.update(cand)
+                break
+        if assigned is None:
+            out.append(None)
+        elif len(assigned) == 1:
+            out.append(assigned[0])
+        else:
+            out.append(assigned)
+    return PartitionSpec(*out)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shape_tree, rules):
+    """axes_tree: pytree of logical-axis tuples; shape_tree: matching pytree
+    of arrays / ShapeDtypeStructs. Returns pytree of NamedShardings."""
+    axes_leaves, treedef = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)
+    shape_leaves = treedef.flatten_up_to(shape_tree)
+    shardings = [
+        NamedSharding(mesh, resolve_spec(a, s.shape, rules, mesh))
+        for a, s in zip(axes_leaves, shape_leaves)]
+    return jax.tree.unflatten(treedef, shardings)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())

@@ -1,0 +1,174 @@
+"""Step functions + abstract input specs for training / prefill / decode.
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the same
+pattern the dry-run lowers against. ``make_*_step`` return pure functions
+suitable for jax.jit with in_shardings from ``step_shardings``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.configs.base import ModelConfig
+from repro.launch import shardings as sh
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+LONG_WINDOW = 8192   # sliding window used by the "swa8k" long-context version
+
+
+def config_for_shape(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Pick the execution *version* of the model for an input shape.
+
+    long_500k requires sub-quadratic attention: archs whose config declares
+    no window get the "swa8k" sliding-window version (EdgeRL's version knob).
+    SSM/hybrid archs run natively.
+    """
+    if shape_name == "long_500k" and not cfg.ssm:
+        if cfg.sliding_window is None and not cfg.block_pattern:
+            cfg = cfg.with_overrides(sliding_window=LONG_WINDOW)
+    # big-model dry-runs use bf16 params/compute
+    return cfg
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, remat: bool = True,
+                    microbatches: int = 1):
+    """microbatches > 1: gradient accumulation over batch slices (scan) —
+    divides live activation memory by the microbatch count at the price of
+    re-running the forward/backward per slice (perf knob; §Perf)."""
+    def grad_fn(params, mb):
+        def loss_fn(p):
+            return M.forward_train(cfg, p, mb, remat=remat)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            n = microbatches
+            mbs = jax.tree.map(
+                lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, met), g = grad_fn(params, mb)
+                g_acc, l_acc = acc
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), met
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), metrics = jax.lax.scan(
+                body, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        params2, opt_state2, om = adamw_update(opt, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params2, opt_state2, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return M.decode_step(cfg, params, cache, token, pos)
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict:
+    b = {"tokens": _sds((B, S), "int32"), "targets": _sds((B, S), "int32")}
+    if cfg.cross_attn_every:
+        b["media"] = _sds((B, cfg.n_media_tokens, cfg.d_model), cfg.cdtype)
+    if cfg.enc_dec:
+        b["enc_frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), cfg.cdtype)
+    return b
+
+
+def batch_axes(cfg: ModelConfig) -> Dict:
+    b = {"tokens": ("batch", "seq"), "targets": ("batch", "seq")}
+    if cfg.cross_attn_every:
+        b["media"] = ("batch", None, None)
+    if cfg.enc_dec:
+        b["enc_frames"] = ("batch", None, None)
+    return b
+
+
+def prefill_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict:
+    b = batch_specs(cfg, B, S)
+    del b["targets"]
+    return b
+
+
+def prefill_batch_axes(cfg: ModelConfig) -> Dict:
+    b = batch_axes(cfg)
+    del b["targets"]
+    return b
+
+
+def cache_specs(cfg: ModelConfig, B: int, seq_len: int):
+    fn = functools.partial(M.init_cache, cfg, B, seq_len)
+    return jax.eval_shape(fn)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """All abstract inputs for one assigned (arch x shape) dry-run."""
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    cfg = config_for_shape(cfg, shape_name)
+    if info["kind"] == "train":
+        params = M.abstract_params(cfg)
+        opt_state = jax.eval_shape(adamw_init, params)
+        return {"params": params, "opt_state": opt_state,
+                "batch": batch_specs(cfg, B, S)}
+    if info["kind"] == "prefill":
+        return {"params": M.abstract_params(cfg),
+                "batch": prefill_batch_specs(cfg, B, S)}
+    # decode
+    return {"params": M.abstract_params(cfg),
+            "cache": cache_specs(cfg, B, S),
+            "token": _sds((B,), "int32"),
+            "pos": _sds((), "int32")}
+
+
+def step_shardings(cfg: ModelConfig, shape_name: str, mesh):
+    """NamedSharding trees matching input_specs structure."""
+    cfg = config_for_shape(cfg, shape_name)
+    rules = sh.logical_rules(cfg, mesh)
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    p_axes = M.param_axes(cfg)
+    p_specs = M.abstract_params(cfg)
+    p_sh = sh.tree_shardings(mesh, p_axes, p_specs, rules)
+    if info["kind"] == "train":
+        opt_specs = jax.eval_shape(adamw_init, p_specs)
+        opt_sh = {"m": p_sh, "v": p_sh, "step": sh.replicated(mesh)}
+        b_sh = sh.tree_shardings(mesh, batch_axes(cfg),
+                                 batch_specs(cfg, B, S), rules)
+        return {"params": p_sh, "opt_state": opt_sh, "batch": b_sh}
+    if info["kind"] == "prefill":
+        b_sh = sh.tree_shardings(mesh, prefill_batch_axes(cfg),
+                                 prefill_batch_specs(cfg, B, S), rules)
+        return {"params": p_sh, "batch": b_sh}
+    c_sh = sh.tree_shardings(mesh, M.cache_axes(cfg),
+                             cache_specs(cfg, B, S), rules)
+    tok_sh = sh.tree_shardings(mesh, {"t": ("batch",)},
+                               {"t": _sds((B,), "int32")}, rules)["t"]
+    return {"params": p_sh, "cache": c_sh, "token": tok_sh,
+            "pos": sh.replicated(mesh)}

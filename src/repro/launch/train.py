@@ -1,0 +1,66 @@
+"""Training launcher: real execution on the local device(s).
+
+For the production-mesh *dry-run* (lower+compile only, 512 virtual
+devices), use ``python -m repro.launch.dryrun``. This launcher actually
+trains: reduced configs on CPU, full configs on real TPU slices.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.checkpointing import save_checkpoint
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models import init, n_params
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=ALL_ARCHS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={args.arch} reduced={args.reduced} "
+          f"params={n_params(cfg):,} devices={jax.device_count()}")
+    params = init(cfg, jax.random.key(0))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=cfg.train_remat,
+                                      microbatches=args.microbatches))
+    ds = SyntheticLMDataset(cfg, DataConfig(batch_size=args.batch,
+                                            seq_len=args.seq))
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (i + 1) % max(args.steps // 10, 1) == 0:
+            print(f"step {i+1:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f}", flush=True)
+    print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+    if args.ckpt_dir:
+        print("checkpoint:", save_checkpoint(args.ckpt_dir, args.steps,
+                                             params))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.models import model
+from repro.models.model import (
+    init, plan_model, abstract_params, param_axes, n_params,
+    forward_train, forward_logits, prefill, decode_step, init_cache,
+    stack_defs, enc_stack_defs,
+)
+
+__all__ = [
+    "model", "init", "plan_model", "abstract_params", "param_axes",
+    "n_params", "forward_train", "forward_logits", "prefill", "decode_step",
+    "init_cache", "stack_defs", "enc_stack_defs",
+]

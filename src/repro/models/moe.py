@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch
+(GShard-style one-hot einsum), shared experts, load-balance aux loss.
+
+The dispatch/combine einsums are the SPMD-friendly baseline: with the
+expert dim sharded over "model" they lower to all-to-all style collectives
+under GSPMD. The sequence is processed in chunks (``moe_chunk``) so the
+dispatch tensor (B, chunk, E, C) stays bounded for 32k-token prefill.
+(EXPERIMENTS.md §Perf iterates on exactly this dispatch overhead.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import P
+from repro.models.layers import plan_mlp, apply_mlp
+
+MOE_CHUNK = 1024   # tokens per dispatch chunk (baseline; perf knob)
+
+
+def plan_moe(cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    plan = {
+        "router": P((d, E), ("embed", "experts"), scale=d ** -0.5),
+        "w_gate": P((E, d, f), ("experts", "embed", "ff")),
+        "w_up": P((E, d, f), ("experts", "embed", "ff")),
+        "w_down": P((E, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        plan["shared"] = plan_mlp(cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return plan
+
+
+def _capacity(chunk: int, cfg: ModelConfig) -> int:
+    c = int(chunk * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cfg.top_k, min(chunk, -(-c // 8) * 8))   # round up to 8
+
+
+def _route(cfg: ModelConfig, p, x):
+    """Shared top-k routing. Returns (top_p, top_e, pos, keep, aux)."""
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B,T,E)
+    top_p, top_e = jax.lax.top_k(probs, K)                    # (B,T,K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    sel = jax.nn.one_hot(top_e, E, dtype=jnp.float32)         # (B,T,K,E)
+    # position of each (token, slot) within its expert buffer
+    flat = sel.reshape(B, T * K, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(B, T, K, E)
+    pos = jnp.sum(pos_in_e * sel, axis=-1)                    # (B,T,K)
+    keep = (pos < C) & (jnp.sum(sel, -1) > 0)
+    # load-balance loss terms (Switch-style): mean prob * mean assignment
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    ce = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))          # (E,)
+    aux = E * jnp.sum(me * ce) / K
+    return top_p, top_e, pos, keep, sel, aux
+
+
+def _experts(cfg, p, xe):
+    h_g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    h_u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    h = jax.nn.silu(h_g) * h_u
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])       # (B,E,C,d)
+
+
+def _dispatch_chunk(cfg: ModelConfig, p, x):
+    """GShard-style one-hot einsum dispatch (baseline). x: (B,T,d)."""
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    top_p, top_e, pos, keep, sel, aux = _route(cfg, p, x)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # combine weights (B,T,K,E,C) folded over K into dispatch/combine tensors
+    combine = jnp.einsum("btke,btkc,btk->btec", sel, pos_oh, top_p)
+    dispatch = jnp.einsum("btke,btkc->btec", sel, pos_oh)
+
+    xe = jnp.einsum("btec,btd->becd", dispatch.astype(x.dtype), x)  # (B,E,C,d)
+    ye = _experts(cfg, p, xe)
+    y = jnp.einsum("btec,becd->btd", combine.astype(x.dtype), ye)
+    return y, aux
+
+
+def _dispatch_chunk_gather(cfg: ModelConfig, p, x):
+    """Scatter/gather dispatch (optimized): no O(T*E*C*d) dispatch matmuls —
+    dispatch is a scatter-add into the expert buffer, combine is a gather.
+    Same capacity semantics as the einsum path (EXPERIMENTS.md §Perf)."""
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    top_p, top_e, pos, keep, sel, aux = _route(cfg, p, x)
+
+    slot = (top_e * C + pos.astype(jnp.int32)).astype(jnp.int32)  # (B,T,K)
+    slot = jnp.where(keep, slot, E * C)                       # overflow slot
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None, None]
+    b_idx = jnp.broadcast_to(b_idx, slot.shape)               # (B,T,K)
+    vals = jnp.broadcast_to(x[:, :, None, :], (B, T, K, d))
+    xe_flat = jnp.zeros((B, E * C + 1, d), x.dtype).at[
+        b_idx, slot].add(vals)
+    xe = xe_flat[:, :E * C].reshape(B, E, C, d)
+    ye = _experts(cfg, p, xe)
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * C, d), jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+    y_tk = ye_flat[b_idx, slot]                               # (B,T,K,d)
+    w = (top_p * keep).astype(x.dtype)
+    y = jnp.sum(y_tk * w[..., None], axis=2)
+    return y, aux
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_loss). Chunks the sequence for dispatch."""
+    B, S, d = x.shape
+    dispatch_fn = (_dispatch_chunk_gather if cfg.moe_impl == "gather"
+                   else _dispatch_chunk)
+    chunk = min(cfg.moe_chunk or MOE_CHUNK, S)
+    if S % chunk != 0:
+        chunk = S  # fallback: single chunk (small/odd sequences)
+    n = S // chunk
+    if n == 1:
+        y, aux = dispatch_fn(cfg, p, x)
+    else:
+        xs = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+
+        def body(_, xc):
+            yc, aux_c = dispatch_fn(cfg, p, xc)
+            return None, (yc, aux_c)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+        aux = jnp.mean(auxs)
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(cfg, p["shared"], x)
+    return y, aux * cfg.router_aux_weight

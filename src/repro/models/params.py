@@ -1,0 +1,114 @@
+"""Parameter *plans*: declarative shapes + logical axes + initializers.
+
+Model code declares a nested dict of ``P`` descriptors. From one plan we
+derive (a) materialized parameters (``init``), (b) the logical-axes tree used
+by launch/shardings.py to build NamedShardings, and (c) eval_shape structs
+for allocation-free dry-runs.
+
+Logical axis vocabulary (resolved to mesh axes in launch/shardings.py):
+  "vocab", "embed", "ff", "heads", "kv_heads", "experts", "inner" (mamba),
+  "lru", "layers" (stacking dim), None (replicated dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: Union[str, Callable] = "fan_in"   # fan_in | zeros | ones | normal | callable
+    scale: Optional[float] = None           # stddev override for normal inits
+    dtype: Optional[str] = None             # override model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def _leaf_key(rng: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "big")
+    return jax.random.fold_in(rng, h)
+
+
+def _init_leaf(p: P, key: jax.Array, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(p.dtype) if p.dtype else default_dtype
+    if callable(p.init):
+        out = p.init(key, p.shape, dtype)
+        assert out.shape == p.shape, (out.shape, p.shape)
+        return out
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":
+        std = p.scale if p.scale is not None else 0.02
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+    if p.init == "fan_in":
+        # fan-in = second-to-last dim for matrices (stacking dims excluded)
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+        std = p.scale if p.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def _iter_with_path(plan, prefix=""):
+    if is_p(plan):
+        yield prefix, plan
+        return
+    if isinstance(plan, dict):
+        for k in sorted(plan):
+            yield from _iter_with_path(plan[k], f"{prefix}/{k}")
+        return
+    raise TypeError(f"plan node must be dict or P, got {type(plan)} at {prefix}")
+
+
+def _map_plan(fn, plan, prefix=""):
+    if is_p(plan):
+        return fn(prefix, plan)
+    return {k: _map_plan(fn, v, f"{prefix}/{k}") for k, v in plan.items()}
+
+
+def materialize(plan, rng: jax.Array, default_dtype) -> Any:
+    """Plan -> pytree of initialized arrays (rng folded per leaf path)."""
+    return _map_plan(
+        lambda path, p: _init_leaf(p, _leaf_key(rng, path), default_dtype), plan)
+
+
+def abstract(plan, default_dtype) -> Any:
+    """Plan -> pytree of ShapeDtypeStruct (no allocation; for dry-runs)."""
+    return _map_plan(
+        lambda path, p: jax.ShapeDtypeStruct(
+            p.shape, jnp.dtype(p.dtype) if p.dtype else default_dtype),
+        plan)
+
+
+def axes_tree(plan) -> Any:
+    """Plan -> pytree of logical-axes tuples (same structure as params)."""
+    return _map_plan(lambda path, p: p.axes, plan)
+
+
+def stack(plan, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacking dim of size n to every leaf (for scan-over-layers)."""
+    return _map_plan(
+        lambda path, p: dataclasses.replace(
+            p, shape=(n,) + p.shape, axes=(axis_name,) + p.axes), plan)
+
+
+def count_params(plan) -> int:
+    total = 0
+    for _, p in _iter_with_path(plan):
+        n = 1
+        for d in p.shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (adamw_init, adamw_update, AdamWConfig,
+                               cosine_schedule, global_norm, clip_by_global_norm)
+
+__all__ = ["adamw_init", "adamw_update", "AdamWConfig", "cosine_schedule",
+           "global_norm", "clip_by_global_norm"]

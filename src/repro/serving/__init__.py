@@ -1,0 +1,5 @@
+from repro.serving.engine import ServeConfig, ServingEngine, SplitServingEngine
+from repro.serving.scheduler import ContinuousBatchingServer, Request
+
+__all__ = ["ServeConfig", "ServingEngine", "SplitServingEngine",
+           "ContinuousBatchingServer", "Request"]

@@ -1,0 +1,102 @@
+"""Batched serving engine: prefill + scanned decode with KV caches, plus the
+EdgeRL *split* executor (head/tail across device/server submeshes).
+
+``ServingEngine`` is the plain path: jit'd prefill builds the cache, a
+jit'd ``lax.scan`` decodes N tokens greedily or with temperature sampling.
+
+``SplitServingEngine`` is the paper's deployment: an EdgeRL controller
+decision (version j, cut l) routes each request batch — the head segment
+runs as one jit (the "UAV"/head submesh), the cut activation crosses the
+link, the tail + decode runs as another jit (the edge-server submesh).
+The two jits exercise exactly the partition the paper's Fig. 1 shows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import partition
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0    # 0 => greedy
+    cache_len: Optional[int] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+
+        def _prefill(params, batch):
+            total = serve.cache_len
+            if total is None:
+                total = batch["tokens"].shape[1] + serve.max_new_tokens
+            return M.prefill(cfg, params, batch, total_len=total)
+
+        def _generate(params, cache, first_tok, pos0, rng):
+            def step(carry, k):
+                cache, tok, pos = carry
+                logits, cache = M.decode_step(cfg, params, cache, tok, pos)
+                if serve.temperature > 0:
+                    nxt = jax.random.categorical(
+                        k, logits / serve.temperature, axis=-1)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                return (cache, nxt, pos + 1), nxt
+            keys = jax.random.split(rng, serve.max_new_tokens)
+            (cache, _, _), toks = jax.lax.scan(
+                step, (cache, first_tok, pos0), keys)
+            return toks.T, cache             # (B, N)
+
+        self._prefill = jax.jit(_prefill)
+        self._generate = jax.jit(_generate)
+
+    def generate(self, batch: Dict, rng=None) -> jnp.ndarray:
+        """batch: {tokens (B,S), [media|enc_frames]} -> (B, max_new_tokens)."""
+        rng = rng if rng is not None else jax.random.key(0)
+        logits, cache = self._prefill(self.params, batch)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos0 = jnp.int32(batch["tokens"].shape[1])
+        toks, _ = self._generate(self.params, cache, first, pos0, rng)
+        # the prefill argmax IS generated token 0; the scan produced 1..N
+        return jnp.concatenate([first[:, None], toks[:, :-1]], axis=1)
+
+
+class SplitServingEngine:
+    """EdgeRL-routed split inference (single forward; classification-style
+    scoring of the last position, mirroring the paper's object-classifier
+    workload on transformers)."""
+
+    def __init__(self, cfg: ModelConfig, params):
+        self.cfg = cfg
+        self.params = params
+        self._heads = {}
+        self._tails = {}
+
+    def _fns(self, cut: Tuple[str, int]):
+        if cut not in self._heads:
+            cfg, params = self.cfg, self.params
+            self._heads[cut] = jax.jit(
+                lambda p, b: partition.run_head(cfg, p, b, cut))
+            self._tails[cut] = jax.jit(
+                lambda p, a, b: partition.run_tail(cfg, p, a, b, cut))
+        return self._heads[cut], self._tails[cut]
+
+    def infer(self, batch: Dict, cut: Tuple[str, int]):
+        """Returns (logits, cut_activation_bytes) — the activation is what
+        crosses the device->server link; its size feeds the EdgeRL env."""
+        head, tail = self._fns(cut)
+        act = head(self.params, batch)
+        act_bytes = act.size * act.dtype.itemsize
+        logits = tail(self.params, act, batch)
+        return logits, act_bytes

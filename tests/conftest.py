@@ -1,0 +1,32 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run, and only the
+# dry-run, sets --xla_force_host_platform_device_count=512 itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    r = np.random.default_rng(seed)
+    import jax.numpy as jnp
+    b = {"tokens": jnp.asarray(
+            r.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+         "targets": jnp.asarray(
+            r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.cross_attn_every:
+        b["media"] = jnp.asarray(
+            r.normal(size=(B, cfg.n_media_tokens, cfg.d_model)), jnp.float32)
+    if cfg.enc_dec:
+        b["enc_frames"] = jnp.asarray(
+            r.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    return b

@@ -1,0 +1,211 @@
+"""EdgeRL core: env invariants (hypothesis property tests), reward math,
+profiles, and A2C learning."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (A2CConfig, EnvConfig, RewardWeights, env_reset,
+                        env_step, make_paper_env, make_tpu_env, observe,
+                        paper_profiles)
+from repro.core import reward as rw
+from repro.core.baselines import POLICIES
+from repro.core.env import action_costs, build_tables
+from repro.core.profiles import transformer_profile
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="module")
+def paper_env():
+    return make_paper_env()
+
+
+# --------------------------------------------------------------------------
+# profiles
+# --------------------------------------------------------------------------
+
+def test_paper_profile_flops_match_literature():
+    """Analytic GFLOPs must land near the published numbers."""
+    profs = paper_profiles()
+    expect = {("vgg", "11"): 15.2, ("vgg", "19"): 39.0,
+              ("resnet", "18"): 3.6, ("resnet", "50"): 8.2,
+              ("densenet", "121"): 5.7, ("densenet", "161"): 15.6}
+    for p in profs.values():
+        for v in p.versions:
+            want = expect[(v.model, v.version)]
+            got = v.total_flops / 1e9
+            assert abs(got - want) / want < 0.15, (v.model, v.version, got)
+
+
+def test_profile_head_tail_partition():
+    profs = paper_profiles()
+    for p in profs.values():
+        for v in p.versions:
+            for cut in v.cut_points:
+                np.testing.assert_allclose(
+                    v.head_flops(cut) + v.tail_flops(cut), v.total_flops,
+                    rtol=1e-9)
+            assert v.head_flops(0) == 0
+            assert v.tail_flops(v.n_layers) == 0
+
+
+def test_transformer_profiles_cover_all_archs():
+    from repro.configs import ALL_ARCHS
+    for a in ALL_ARCHS:
+        prof = transformer_profile(get_config(a))
+        assert prof.versions
+        for v in prof.versions:
+            assert v.total_flops > 0
+            assert all(0 < c <= v.n_layers for c in v.cut_points)
+
+
+# --------------------------------------------------------------------------
+# reward math (Eqs. 8-11)
+# --------------------------------------------------------------------------
+
+@given(acc=st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_accuracy_score_bounds(acc):
+    w = RewardWeights()
+    s = float(rw.accuracy_score(w, jnp.float32(acc)))
+    assert 0.0 <= s <= 1.0
+
+
+@given(t=st.floats(0.0, 100.0), tfull=st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_latency_score_upper_bound(t, tfull):
+    s = float(rw.latency_score(jnp.float32(t), jnp.float32(tfull)))
+    assert s <= 1.0 + 1e-6
+    if t <= tfull:
+        assert s >= 0.0 - 1e-6
+
+
+def test_weights_normalize():
+    w = RewardWeights(w_acc=2.0, w_lat=1.0, w_energy=1.0).normalized()
+    assert abs(w.w_acc + w.w_lat + w.w_energy - 1.0) < 1e-9
+
+
+# --------------------------------------------------------------------------
+# env invariants
+# --------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), j=st.integers(0, 1),
+       k=st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_env_step_invariants(seed, j, k, ):
+    cfg, tables = make_paper_env()
+    key = jax.random.key(seed)
+    state = env_reset(cfg, tables, key)
+    actions = jnp.tile(jnp.asarray([[j, k]], jnp.int32), (cfg.n_uavs, 1))
+    state2, r, info = env_step(cfg, tables, state, actions, key)
+    # battery is non-increasing and non-negative
+    assert bool(jnp.all(state2["battery_j"] <= state["battery_j"]))
+    assert bool(jnp.all(state2["battery_j"] >= 0.0))
+    # bandwidth stays in range
+    lp = cfg.latency
+    assert bool(jnp.all(state2["bandwidth"] >= lp.bw_min_bps - 1))
+    assert bool(jnp.all(state2["bandwidth"] <= lp.bw_max_bps + 1))
+    # queue non-negative, reward finite
+    assert float(state2["queue"]) >= 0.0
+    assert np.isfinite(float(r))
+    # latency decomposition positive
+    assert bool(jnp.all(info["t_total"] > 0.0))
+    assert bool(jnp.all(info["e_infer"] >= 0.0))
+
+
+def test_observation_shape_and_range(paper_env):
+    cfg, tables = paper_env
+    state = env_reset(cfg, tables, jax.random.key(0))
+    obs = observe(cfg, tables, state)
+    assert obs.shape == (cfg.n_uavs, cfg.obs_dim_per_uav)
+    assert bool(jnp.all(jnp.isfinite(obs)))
+
+
+def test_cut_monotonicity(paper_env):
+    """Later cuts -> more head FLOPs, i.e. more device time (Eq. 1)."""
+    cfg, tables = paper_env
+    state = env_reset(cfg, tables, jax.random.key(0))
+    t_loc = []
+    for k in range(tables.n_cuts):
+        a = jnp.tile(jnp.asarray([[1, k]], jnp.int32), (cfg.n_uavs, 1))
+        head = tables.head_flops[state["model_id"], a[:, 0], a[:, 1]]
+        t_loc.append(np.asarray(head))
+    t = np.stack(t_loc)
+    assert (np.diff(t, axis=0) >= 0).all()
+
+
+def test_greedy_beats_random(paper_env):
+    from repro.core import evaluate_policy
+    cfg, tables = paper_env
+    g = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+                        jax.random.key(3), episodes=1)
+    r = evaluate_policy(cfg, tables, POLICIES["random"],
+                        jax.random.key(3), episodes=1)
+    assert g["reward"] > r["reward"]
+
+
+def test_tpu_env_builds_and_steps():
+    cfg, tables = make_tpu_env(["qwen2-0.5b", "falcon-mamba-7b"])
+    state = env_reset(cfg, tables, jax.random.key(0))
+    actions = jnp.zeros((2, 2), jnp.int32)
+    state2, r, info = env_step(cfg, tables, state, actions, jax.random.key(1))
+    assert np.isfinite(float(r))
+
+
+# --------------------------------------------------------------------------
+# A2C learning
+# --------------------------------------------------------------------------
+
+def test_a2c_improves_over_training(paper_env):
+    from repro.core import train_agent
+    cfg, tables = paper_env
+    _, hist = train_agent(cfg, tables, A2CConfig(episodes=80), seed=0)
+    first = np.mean([h["mean_reward"] for h in hist[:15]])
+    last = np.mean([h["mean_reward"] for h in hist[-15:]])
+    assert last > first + 0.05, (first, last)
+
+
+def test_a2c_episode_is_deterministic(paper_env):
+    from repro.core import init_agent, make_train_episode
+    from repro.optim import adamw_init
+    cfg, tables = paper_env
+    ac = A2CConfig(episodes=2)
+    params = init_agent(cfg, tables, ac, jax.random.key(0))
+    opt = adamw_init(params)
+    step = make_train_episode(cfg, tables, ac)
+    _, _, s1 = step(params, opt, jax.random.key(7))
+    _, _, s2 = step(params, opt, jax.random.key(7))
+    assert float(s1["loss"]) == float(s2["loss"])
+
+
+def test_dryrun_calibrated_env(tmp_path):
+    """Beyond-paper: profiles calibrated to measured dry-run FLOPs."""
+    import json
+    import os
+    from repro.core.roofline_env import make_dryrun_tpu_env
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "dryrun.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("no dry-run results in this checkout")
+    cfg, tables = make_dryrun_tpu_env(["qwen2-0.5b", "falcon-mamba-7b"],
+                                      results=path)
+    state = env_reset(cfg, tables, jax.random.key(0))
+    actions = jnp.zeros((2, 2), jnp.int32)
+    _, r, info = env_step(cfg, tables, state, actions, jax.random.key(1))
+    assert np.isfinite(float(r))
+    # calibrated totals must exceed the naive analytic ones (remat etc.)
+    assert float(tables.full_flops[0, 0]) > 0
+
+
+def test_ppo_learns(paper_env):
+    """Beyond-paper PPO agent also improves on the EdgeRL env."""
+    from repro.core import ppo as PPO
+    cfg, tables = paper_env
+    _, hist = PPO.train(cfg, tables, PPO.PPOConfig(episodes=60),
+                        jax.random.key(0))
+    first = np.mean([h["mean_reward"] for h in hist[:10]])
+    last = np.mean([h["mean_reward"] for h in hist[-10:]])
+    assert last > first + 0.03, (first, last)

@@ -1,0 +1,31 @@
+"""Integration: the multi-pod dry-run lowers+compiles in a fresh process
+(512 virtual devices are process-global, so this must be a subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("qwen2-0.5b", "decode_32k", "single"),
+    ("qwen2-0.5b", "long_500k", "multi"),
+    ("falcon-mamba-7b", "decode_32k", "multi"),
+])
+def test_dryrun_combo(tmp_path, arch, shape, mesh):
+    out = tmp_path / "dryrun.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=600, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(out.read_text().strip().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["devices"] == (512 if mesh == "multi" else 256)
+    assert rec["jaxpr_flops"] > 0
+    assert "collectives" in rec

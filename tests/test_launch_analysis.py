@@ -1,0 +1,142 @@
+"""Coverage for launch/ and analysis/ layers that don't need 512 devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config
+from repro.launch import steps as st
+from repro.launch.mesh import axis_size, data_axes, model_axes
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.shape = dict(zip(names, shape))
+        self.axis_names = names
+
+
+SINGLE = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_mesh_axis_helpers():
+    assert data_axes(MULTI) == ("pod", "data")
+    assert model_axes(MULTI) == ("model",)
+    assert axis_size(MULTI, ("pod", "data")) == 32
+    assert axis_size(SINGLE, ("data",)) == 16
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_shapes(arch, shape):
+    """Abstract inputs exist for every (arch x shape) with correct dims."""
+    cfg = get_config(arch)
+    specs = st.input_specs(cfg, shape)
+    info = SHAPES[shape]
+    assert "params" in specs
+    if info["kind"] == "train":
+        assert specs["batch"]["tokens"].shape == (info["global_batch"],
+                                                  info["seq_len"])
+        assert "opt_state" in specs
+    elif info["kind"] == "prefill":
+        assert specs["batch"]["tokens"].shape == (info["global_batch"],
+                                                  info["seq_len"])
+        assert "targets" not in specs["batch"]
+    else:
+        assert specs["token"].shape == (info["global_batch"],)
+        assert specs["pos"].shape == ()
+        assert "cache" in specs
+        # cache seq dims bounded by min(window, seq_len)
+        ccfg = st.config_for_shape(cfg, shape)
+        if not ccfg.ssm:
+            leaves = jax.tree.leaves(specs["cache"])
+            assert max(l.shape[2] if l.ndim > 2 else 0 for l in leaves) \
+                <= info["seq_len"]
+
+
+def test_config_for_shape_long_context_versions():
+    """long_500k must select a sub-quadratic version for every arch."""
+    for arch in ALL_ARCHS:
+        cfg = st.config_for_shape(get_config(arch), "long_500k")
+        ok = (cfg.ssm or cfg.block_pattern or cfg.sliding_window is not None)
+        assert ok, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x22b",
+                                  "deepseek-v2-lite-16b", "falcon-mamba-7b"])
+def test_step_shardings_structure(arch):
+    """Sharding trees mirror input-spec trees, with legal specs."""
+    from repro.launch import shardings as sh
+    cfg = get_config(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shard = st.step_shardings(cfg, "train_4k", mesh)
+    specs = st.input_specs(cfg, "train_4k")
+    assert jax.tree.structure(shard["params"]) == \
+        jax.tree.structure(specs["params"])
+    # every sharding's spec length <= leaf rank
+    for s, spec in zip(jax.tree.leaves(specs["params"]),
+                       jax.tree.leaves(shard["params"])):
+        assert len(spec.spec) <= len(s.shape)
+
+
+def test_fsdp_rules_shard_embed_over_data():
+    from repro.launch.shardings import logical_rules, resolve_spec
+    cfg = get_config("llama-3.2-vision-90b")
+    r0 = logical_rules(cfg, SINGLE)
+    r1 = logical_rules(cfg.with_overrides(fsdp=True), SINGLE)
+    assert r0["embed"] == ()
+    assert r1["embed"] == ("data",)
+    spec = resolve_spec(("embed", "heads"), (8192, 8192), r1, SINGLE)
+    assert spec[0] == "data" and spec[1] == "model"
+
+
+def test_roofline_enrich_synthetic():
+    from repro.analysis.roofline import enrich
+    rec = {"arch": "qwen2-0.5b", "shape": "train_4k", "mesh": "single",
+           "devices": 256, "status": "ok",
+           "jaxpr_flops": 256 * 197e12,          # exactly 1 s compute
+           "jaxpr_bytes_fused": 256 * 819e9 / 2,  # 0.5 s memory
+           "collectives": {"total_bytes": 256 * 50e9 / 4}}   # 0.25 s
+    e = enrich(rec)
+    assert abs(e["compute_s"] - 1.0) < 1e-9
+    assert abs(e["memory_s"] - 0.5) < 1e-9
+    assert abs(e["collective_s"] - 0.25) < 1e-9
+    assert e["dominant"] == "compute"
+    assert e["model_flops"] > 0
+
+
+def test_collective_parser_loop_multiplication():
+    from repro.analysis.hlo_collectives import collective_bytes
+    hlo = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.1 (t: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %t = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[4,8] get-tuple-element(%t), index=1
+  %ag = f32[4,8] all-gather(%x), dimensions={0}
+  ROOT %out = (s32[], f32[4,8]) tuple(%i, %ag)
+}
+
+%cond.1 (t: (s32[], f32[4,8])) -> pred[] {
+  %t = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c = s32[] constant(26)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = (s32[], f32[4,8]) parameter(0)
+  ROOT %w = (s32[], f32[4,8]) while(%p), condition=%cond.1, body=%body.1
+}
+"""
+    out = collective_bytes(hlo)
+    # the all-gather inside the loop body must be multiplied by 26 trips
+    assert out["all-gather"] == 26 * 4 * 8 * 4
+    assert out["n_all-gather"] == 26
