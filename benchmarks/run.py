@@ -330,12 +330,47 @@ def kernels_interpret():
     row("flash_attention_interpret", us, "B1_H4_S256_D64,CPU_interpret_mode")
 
 
+def quant_matmul(M=512, K=512, N=512):
+    """int8-vs-bf16 matmul throughput (repro.quant w8a8 path).
+
+    On TPU the int8 MXU path doubles MAC throughput; on this CPU
+    container the numbers only sanity-check dispatch overheads, so the
+    derived column reports GFLOP/s for both plus the quantization error."""
+    from repro.kernels.quant_matmul import quant_matmul_ref
+    from repro.quant import quantize, quantize_act
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(K, N)) * 0.05, jnp.float32)
+    xb, wb = x.astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+    qt = quantize(w, "w8a8")
+    xq, xs = quantize_act(x)
+    xs_, ws_ = xs.reshape(-1), qt.scale.reshape(-1)
+
+    mm = jax.jit(lambda a, b: a @ b)
+    us_bf16 = _timeit(lambda: mm(xb, wb), n=10)
+    qmm = jax.jit(lambda a, b, s1, s2: quant_matmul_ref(a, b, s1, s2))
+    us_i8 = _timeit(lambda: qmm(xq, qt.q, xs_, ws_), n=10)
+    flops = 2.0 * M * K * N
+    y = x @ w
+    yq = quant_matmul_ref(xq, qt.q, xs_, ws_)
+    rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+    row("quant_matmul", us_i8,
+        f"MKN={M} int8_gflops={flops/us_i8/1e3:.1f} "
+        f"bf16_us={us_bf16:.1f} bf16_gflops={flops/us_bf16/1e3:.1f} "
+        f"relerr={rel:.4f}")
+
+    from repro.kernels.quant_matmul import quant_matmul as qmm_pallas
+    us_pl = _timeit(lambda: qmm_pallas(xq, qt.q, xs_, ws_, interpret=True),
+                    n=2)
+    row("quant_matmul_interpret", us_pl, f"MKN={M},CPU_interpret_mode")
+
+
 ALL = [table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
        fig4_energy_sweep, table2_cut_selection, baseline_policies,
        a2c_convergence, ablation_a2c, ablation_agents, roofline_suite,
        hillclimb_variants,
        serving_decode, split_inference, continuous_batching,
-       kernels_interpret]
+       kernels_interpret, quant_matmul]
 
 
 def main() -> None:
@@ -345,9 +380,16 @@ def main() -> None:
                     help="run sweeps with trained A2C agents (slow)")
     ap.add_argument("--episodes", type=int, default=200)
     args = ap.parse_args()
+    known = {fn.__name__ for fn in ALL}
+    selected = args.only.split(",") if args.only else None
+    if selected:
+        unknown = sorted(set(selected) - known)
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; known: {sorted(known)}")
     print("name,us_per_call,derived")
+    errors = 0
     for fn in ALL:
-        if args.only and fn.__name__ not in args.only.split(","):
+        if selected and fn.__name__ not in selected:
             continue
         kw = {}
         if fn.__name__ in ("fig2_accuracy_sweep", "fig3_latency_sweep",
@@ -359,6 +401,9 @@ def main() -> None:
             fn(**kw)
         except Exception as e:   # noqa: BLE001 - report but keep benching
             row(fn.__name__, -1.0, f"ERROR={type(e).__name__}:{e}")
+            errors += 1
+    if errors:
+        raise SystemExit(1)   # make ERROR rows visible to CI
 
 
 if __name__ == "__main__":

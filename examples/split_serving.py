@@ -1,11 +1,13 @@
 """EdgeRL-routed split inference on a transformer (the paper's deployment
-pattern mapped to the TPU stack, DESIGN.md §2).
+pattern mapped to the TPU stack, DESIGN.md §2-3).
 
 The controller trains on the TPU-adapted env (device submesh <-> server
-submesh, ICI uplink), then its greedy decisions route request batches:
-(version j, cut l) -> head jit on the "device", activation across the
-link, tail jit on the "server". Prints per-slot decisions with the
-activation bytes that would cross the link and the env's cost estimates.
+submesh, ICI uplink) whose version axis is the repro.quant registry
+(bf16 / w8 / w4); its greedy decisions then route request batches:
+(version j, cut l) -> the matching *quantized* head jit on the "device",
+activation across the link (int8 for w8), tail jit on the "server".
+Prints per-slot decisions with the measured activation bytes that cross
+the link and the env's cost estimates.
 
     PYTHONPATH=src python examples/split_serving.py [--arch qwen2-0.5b]
 """
@@ -16,10 +18,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import (A2CConfig, decide, env_reset, env_step, make_tpu_env,
-                        train_agent)
+                        resolve_selection, train_agent, transformer_profile)
 from repro.core.env import action_costs
-from repro.core.partition import cut_points
 from repro.models import init
+from repro.quant import DEFAULT_VERSIONS
 from repro.serving import SplitServingEngine
 
 
@@ -30,16 +32,17 @@ def main():
     ap.add_argument("--slots", type=int, default=6)
     args = ap.parse_args()
 
-    # 1) controller: train A2C on the TPU-adapted EdgeRL env
-    env_cfg, tables = make_tpu_env([args.arch])
+    # 1) controller: train A2C on the TPU-adapted EdgeRL env, profiled on
+    #    the reduced arch so its table indices address the executable model
+    env_cfg, tables = make_tpu_env([args.arch], reduced=True)
     print(f"training controller on TPU env for {args.episodes} episodes ...")
     agent, _ = train_agent(env_cfg, tables, A2CConfig(episodes=args.episodes))
 
-    # 2) executor: reduced model + split engine (head/tail jits)
+    # 2) executor: reduced model + quantized version params + split engine
     cfg = get_config(args.arch).reduced()
+    profile = transformer_profile(cfg)
     params = init(cfg, jax.random.key(0))
-    engine = SplitServingEngine(cfg, params)
-    cuts = cut_points(cfg)
+    engine = SplitServingEngine(cfg, params, versions=DEFAULT_VERSIONS)
     toks = (jnp.arange(2 * 32, dtype=jnp.int32).reshape(2, 32) * 11) \
         % cfg.vocab_size
     batch = {"tokens": toks}
@@ -48,19 +51,19 @@ def main():
     if cfg.enc_dec:
         batch["enc_frames"] = jnp.zeros((2, cfg.encoder_seq, cfg.d_model))
 
-    # 3) serve: each slot, controller decides -> engine executes that cut
+    # 3) serve: each slot, controller decides -> engine executes that
+    #    (version, cut) with the matching quantized params
     state = env_reset(env_cfg, tables, jax.random.key(7))
     rng = jax.random.key(3)
-    print(f"\n{'slot':>4} {'ver':>4} {'cut':>10} {'act_bytes':>10} "
+    print(f"\n{'slot':>4} {'ver':>5} {'cut':>12} {'act_bytes':>10} "
           f"{'est_lat_ms':>10} {'est_E_J':>8}")
     for t in range(args.slots):
         actions = decide(agent, env_cfg, tables, state)
         j, k = int(actions[0, 0]), int(actions[0, 1])
-        # map the env's cut index onto the reduced model's legal boundaries
-        cut = cuts[min(k * len(cuts) // tables.n_cuts, len(cuts) - 1)]
-        logits, nbytes = engine.infer(batch, cut)
+        version, cut = resolve_selection(cfg, profile, j, k)
+        logits, nbytes = engine.infer(batch, cut, version)
         _, _, _, t_total, e_inf = action_costs(env_cfg, tables, state, actions)
-        print(f"{t:4d} {j:4d} {str(cut):>10} {nbytes:10d} "
+        print(f"{t:4d} {version:>5} {str(cut):>12} {nbytes:10d} "
               f"{float(t_total[0])*1e3:10.2f} {float(e_inf[0]):8.3f}")
         rng, k_env = jax.random.split(rng)
         state, _, _ = env_step(env_cfg, tables, state, actions, k_env)

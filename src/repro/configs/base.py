@@ -94,9 +94,10 @@ class ModelConfig:
                                      # over the data axis (all-gather at use)
 
     # -- EdgeRL execution-profile metadata -------------------------------------
-    #   versions: names of pre-cached variants of this model (paper: VGG11/19).
+    #   versions: quantization levels of this model available as EdgeRL
+    #   versions (repro.quant registry names; paper analogue: VGG11/19).
     #   cut_points resolved at runtime from layer profiles (core/profiles.py).
-    versions: Tuple[str, ...] = ("base",)
+    versions: Tuple[str, ...] = ("bf16", "w8", "w4")
 
     # ------------------------------------------------------------------------
     @property

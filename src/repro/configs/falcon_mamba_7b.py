@@ -17,5 +17,4 @@ CONFIG = register(ModelConfig(
     ssm_expand=2,
     use_rope=False,
     norm="rmsnorm",
-    versions=("base",),
 ))

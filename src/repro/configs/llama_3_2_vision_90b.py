@@ -23,5 +23,4 @@ CONFIG = register(ModelConfig(
     n_media_tokens=1601,    # one image tile: (448/14)^2 + 1 cls
     norm="rmsnorm",
     mlp_act="swiglu",
-    versions=("base", "swa8k"),
 ))

@@ -24,5 +24,4 @@ CONFIG = register(ModelConfig(
     rope_theta=1_000_000.0,
     norm="rmsnorm",
     mlp_act="swiglu",
-    versions=("base",),
 ))

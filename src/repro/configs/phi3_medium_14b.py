@@ -15,5 +15,4 @@ CONFIG = register(ModelConfig(
     rope_theta=10_000.0,
     norm="rmsnorm",
     mlp_act="swiglu",
-    versions=("base", "swa8k"),
 ))

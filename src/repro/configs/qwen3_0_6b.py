@@ -18,5 +18,4 @@ CONFIG = register(ModelConfig(
     norm="rmsnorm",
     mlp_act="swiglu",
     tie_embeddings=True,
-    versions=("base", "swa8k"),
 ))

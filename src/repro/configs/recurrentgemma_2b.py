@@ -24,5 +24,4 @@ CONFIG = register(ModelConfig(
     norm="rmsnorm",
     mlp_act="geglu",
     tie_embeddings=True,
-    versions=("base",),
 ))

@@ -21,5 +21,4 @@ CONFIG = register(ModelConfig(
     norm="layernorm",
     mlp_act="gelu",
     sliding_window=4096,     # starcoder2 trains with 4k sliding window
-    versions=("base", "swa8k"),
 ))

@@ -25,5 +25,4 @@ CONFIG = register(ModelConfig(
     attn_bias=True,
     norm="layernorm",
     mlp_act="gelu",
-    versions=("base",),
 ))

@@ -4,19 +4,21 @@ Profiles (CNN analytic + transformer), energy/latency cost models
 (Eqs. 1-5), the EdgeEnv MDP (Eq. 6-7), reward (Eqs. 8-11), the A2C agent
 (Sec. II-C) and the centralized controller (Sec. II-D).
 """
-from repro.core.env import (EnvConfig, ProfileTables, build_tables,
-                            env_reset, env_step, observe)
+from repro.core.env import (OBS_FEATURES, EnvConfig, ProfileTables,
+                            build_tables, env_reset, env_step, observe)
 from repro.core.reward import RewardWeights
 from repro.core.a2c import A2CConfig, train, init_agent, make_train_episode
 from repro.core.profiles import paper_profiles, transformer_profile
-from repro.core.controller import (make_paper_env, make_tpu_env, train_agent,
+from repro.core.controller import (make_paper_env, make_tpu_env,
+                                   resolve_selection, train_agent,
                                    evaluate_policy, decide, agent_policy)
 from repro.core.roofline_env import make_dryrun_tpu_env
 
 __all__ = [
-    "EnvConfig", "ProfileTables", "build_tables", "env_reset", "env_step",
-    "observe", "RewardWeights", "A2CConfig", "train", "init_agent",
-    "make_train_episode", "paper_profiles", "transformer_profile",
-    "make_paper_env", "make_tpu_env", "train_agent", "evaluate_policy",
-    "decide", "agent_policy", "make_dryrun_tpu_env",
+    "OBS_FEATURES", "EnvConfig", "ProfileTables", "build_tables",
+    "env_reset", "env_step", "observe", "RewardWeights", "A2CConfig",
+    "train", "init_agent", "make_train_episode", "paper_profiles",
+    "transformer_profile", "make_paper_env", "make_tpu_env",
+    "resolve_selection", "train_agent", "evaluate_policy", "decide",
+    "agent_policy", "make_dryrun_tpu_env",
 ]

@@ -54,17 +54,45 @@ _TPU_POWER = DevicePower(
 def make_tpu_env(arch_names: Sequence[str],
                  weights: RewardWeights = RewardWeights(),
                  seq_len: int = 2048,
+                 reduced: bool = False,
                  **env_kw) -> Tuple[EnvConfig, ProfileTables]:
+    """TPU-adapted env whose version axis is the repro.quant registry
+    (bf16 / w8 / w4 — see DESIGN.md §3). ``reduced=True`` profiles the
+    smoke-test variant of each arch so table indices line up with an
+    executable SplitServingEngine model (used by tests/examples that run
+    the controller's decisions end-to-end)."""
     from repro.configs import get_config
 
-    profs = [transformer_profile(get_config(a), seq_len=seq_len)
-             for a in arch_names]
+    cfgs = [get_config(a) for a in arch_names]
+    if reduced:
+        cfgs = [c.reduced() for c in cfgs]
+    profs = [transformer_profile(c, seq_len=seq_len) for c in cfgs]
     tables = build_tables(profs)
+    # weight shipping: a (version, cut) switch stages the tail weights on
+    # the server submesh; amortize over ~1/3 episode of request slots.
+    env_kw.setdefault("weight_ship_slots", 32.0)
     cfg = EnvConfig(n_uavs=len(arch_names), latency=_TPU_LATENCY,
                     power=_TPU_POWER, weights=weights.normalized(),
                     frames_per_slot=1000.0,   # request batches per slot
                     **env_kw)
     return cfg, tables
+
+
+def resolve_selection(model_cfg, profile, j: int, k: int):
+    """Map a table action (version j, cut index k) to something the
+    SplitServingEngine can execute: (quant version name, partition cut).
+
+    ``profile`` must be the ModelProfile the tables were built from (same
+    cfg), so the cut index addresses the same candidate list. Indices
+    beyond this model's version/cut count clamp to the last entry — the
+    same padding rule build_tables applies when mixing models of
+    different sizes, so the executed action is the one the tables
+    scored."""
+    from repro.core import partition
+
+    v = profile.versions[min(j, len(profile.versions) - 1)]
+    layer = v.cut_points[min(k, len(v.cut_points) - 1)]
+    return v.version, partition.cut_for_layer(model_cfg, layer)
 
 
 def train_agent(cfg: EnvConfig, tables: ProfileTables,

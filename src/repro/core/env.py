@@ -25,6 +25,17 @@ from repro.core import reward as rw
 from repro.core.profiles import ModelProfile
 
 
+# Per-UAV observation feature spec (Eq. 6 + bandwidth/queue, which the
+# controller measures). ``observe`` emits exactly these features in this
+# order, and the A2C input width is derived from it — adding a feature
+# here resizes the agent instead of silently desyncing it.
+OBS_FEATURES: Tuple[str, ...] = (
+    "battery", "task", "p_tx", "model_id",
+    "act_forward", "act_vertical", "act_rotate",
+    "bandwidth", "queue",
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class EnvConfig:
     n_uavs: int = 3
@@ -37,6 +48,10 @@ class EnvConfig:
     # High activity profile (paper Sec. III-A): 80% fwd, 10% vert, 10% rot
     activity: Tuple[float, float, float] = (0.8, 0.1, 0.1)
     activity_jitter: float = 0.05
+    # Slots a (version, cut) choice persists for, amortizing the shipping
+    # of the tail weights (tables.tail_weight_bytes) over the link.
+    # 0 disables the term (the paper's CNNs are pre-staged on the server).
+    weight_ship_slots: float = 0.0
     power: en.DevicePower = dataclasses.field(default_factory=en.DevicePower)
     latency: lat.LatencyParams = dataclasses.field(
         default_factory=lat.LatencyParams)
@@ -45,7 +60,7 @@ class EnvConfig:
 
     @property
     def obs_dim_per_uav(self) -> int:
-        return 9
+        return len(OBS_FEATURES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +69,7 @@ class ProfileTables:
     head_flops: jnp.ndarray      # (M, V, K)
     tail_flops: jnp.ndarray      # (M, V, K)
     cut_bytes: jnp.ndarray       # (M, V, K)
+    tail_weight_bytes: jnp.ndarray  # (M, V, K) server-side weight shipping
     acc: jnp.ndarray             # (M, V)
     full_flops: jnp.ndarray      # (M, V)  all-local FLOPs
     version_valid: jnp.ndarray   # (M, V) 1.0 if version exists
@@ -73,6 +89,7 @@ def build_tables(profiles: Sequence[ModelProfile]) -> ProfileTables:
     head = np.zeros((M, V, K))
     tail = np.zeros((M, V, K))
     bts = np.zeros((M, V, K))
+    wbts = np.zeros((M, V, K))
     acc = np.zeros((M, V))
     full = np.zeros((M, V))
     valid = np.zeros((M, V))
@@ -88,9 +105,11 @@ def build_tables(profiles: Sequence[ModelProfile]) -> ProfileTables:
                 head[mi, vi, ki] = v.head_flops(c)
                 tail[mi, vi, ki] = v.tail_flops(c)
                 bts[mi, vi, ki] = v.cut_bytes(c)
+                wbts[mi, vi, ki] = v.tail_weight_bytes(c)
     return ProfileTables(
         head_flops=jnp.asarray(head), tail_flops=jnp.asarray(tail),
-        cut_bytes=jnp.asarray(bts), acc=jnp.asarray(acc),
+        cut_bytes=jnp.asarray(bts), tail_weight_bytes=jnp.asarray(wbts),
+        acc=jnp.asarray(acc),
         full_flops=jnp.asarray(full), version_valid=jnp.asarray(valid),
         n_versions=V, n_cuts=K, names=tuple(p.name for p in profiles))
 
@@ -117,22 +136,34 @@ def env_reset(cfg: EnvConfig, tables: ProfileTables, rng,
     }
 
 
-def observe(cfg: EnvConfig, tables: ProfileTables, state) -> jnp.ndarray:
-    """(n_uavs, obs_dim_per_uav) normalized observation (Eq. 6 +
-    bandwidth/queue, which the controller measures)."""
+def _obs_features(cfg: EnvConfig, tables: ProfileTables, state) -> Dict:
+    """Normalized per-UAV features, keyed by OBS_FEATURES name."""
     p, l = cfg.power, cfg.latency
     b = state["battery_j"] / p.battery_j * 10.0
-    feats = jnp.stack([
-        b / 10.0,
-        state["task"],
-        (state["p_tx"] - p.p_tx_min) / (p.p_tx_max - p.p_tx_min),
-        state["model_id"].astype(jnp.float32) / max(tables.n_models - 1, 1),
-        state["activity"][:, 0], state["activity"][:, 1],
-        state["activity"][:, 2],
-        (state["bandwidth"] - l.bw_min_bps) / (l.bw_max_bps - l.bw_min_bps),
-        jnp.broadcast_to(state["queue"] / 20.0, state["task"].shape),
-    ], axis=-1)
-    return feats
+    return {
+        "battery": b / 10.0,
+        "task": state["task"],
+        "p_tx": (state["p_tx"] - p.p_tx_min) / (p.p_tx_max - p.p_tx_min),
+        "model_id": state["model_id"].astype(jnp.float32)
+        / max(tables.n_models - 1, 1),
+        "act_forward": state["activity"][:, 0],
+        "act_vertical": state["activity"][:, 1],
+        "act_rotate": state["activity"][:, 2],
+        "bandwidth": (state["bandwidth"] - l.bw_min_bps)
+        / (l.bw_max_bps - l.bw_min_bps),
+        "queue": jnp.broadcast_to(state["queue"] / 20.0,
+                                  state["task"].shape),
+    }
+
+
+def observe(cfg: EnvConfig, tables: ProfileTables, state) -> jnp.ndarray:
+    """(n_uavs, obs_dim_per_uav) normalized observation (Eq. 6 +
+    bandwidth/queue, which the controller measures). Feature order is
+    OBS_FEATURES — the single source of truth for the A2C input width."""
+    feats = _obs_features(cfg, tables, state)
+    assert set(feats) == set(OBS_FEATURES), (
+        sorted(feats), sorted(OBS_FEATURES))
+    return jnp.stack([feats[k] for k in OBS_FEATURES], axis=-1)
 
 
 def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
@@ -143,6 +174,14 @@ def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
     head = tables.head_flops[m, j, k]
     tail = tables.tail_flops[m, j, k]
     nbytes = tables.cut_bytes[m, j, k]
+    if cfg.weight_ship_slots > 0:
+        # Amortized per-frame share of staging this version's tail weights
+        # server-side: shipped once per decision epoch (weight_ship_slots
+        # slots), spread over every frame served in that epoch. nbytes is
+        # a per-frame quantity (env_step scales by frames_per_slot), so
+        # the divisor must include frames_per_slot too.
+        nbytes = nbytes + (tables.tail_weight_bytes[m, j, k]
+                           / (cfg.weight_ship_slots * cfg.frames_per_slot))
     acc = tables.acc[m, j]
     full = tables.full_flops[m, j]
 

@@ -20,6 +20,27 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 
 
+def cut_for_layer(cfg: ModelConfig, layer_idx: int) -> Tuple[str, int]:
+    """Map a global block index (profile layer numbering) to the nearest
+    legal scan-boundary cut (stack_name, scan index).
+
+    Profiles count decoder blocks; stacks scan superblocks that may cover
+    several blocks per step (e.g. recurrentgemma's (rec,rec,attn) period),
+    so the cut rounds to the closest superblock boundary."""
+    remaining = int(layer_idx)
+    defs = M.stack_defs(cfg)
+    for si, s in enumerate(defs):
+        per = sum(sub.repeat for sub in s.subs)
+        total = s.length * per
+        if remaining <= total or si == len(defs) - 1:
+            step = int(round(remaining / per))
+            if si == 0:
+                step = max(step, 1)   # cut 0 == full offload (caller-level)
+            return (s.name, min(step, s.length))
+        remaining -= total
+    raise AssertionError("unreachable")
+
+
 def cut_points(cfg: ModelConfig) -> List[Tuple[str, int]]:
     """Legal cut boundaries: (stack_name, index within stack scan)."""
     out = []

@@ -27,6 +27,8 @@ class LayerProfile:
     flops: float          # FLOPs to execute this op (per frame)
     out_bytes: float      # activation bytes leaving this op
     params: int
+    weight_bytes: float = 0.0   # actual weight bytes of this op under the
+                                # owning version (0 -> derive from params)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +38,7 @@ class VersionProfile:
     accuracy: float                   # top-1, [0,1]
     layers: Tuple[LayerProfile, ...]
     cut_points: Tuple[int, ...]       # candidate cut layer indices (Table I)
+    bytes_per_param: float = 4.0      # weight-shipping cost (quant versions <4)
 
     @property
     def n_layers(self) -> int:
@@ -58,6 +61,18 @@ class VersionProfile:
         if cut >= len(self.layers):
             return 16.0   # just the class id
         return self.layers[cut - 1].out_bytes
+
+    def tail_weight_bytes(self, cut: int) -> float:
+        """Bytes to place this version's tail on the server — the
+        weight-shipping side of a (version, cut) switch. Uses per-layer
+        measured weight_bytes when the profile provides them (quantized
+        transformer versions price only the dense share at the reduced
+        width); otherwise params x bytes_per_param (CNN paper profiles)."""
+        tail = self.layers[cut:]
+        wb = float(sum(l.weight_bytes for l in tail))
+        if wb > 0:
+            return wb
+        return float(sum(l.params for l in tail)) * self.bytes_per_param
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,31 +289,82 @@ def paper_profiles() -> Dict[str, ModelProfile]:
 # transformer profiles (assigned architectures) — the TPU adaptation
 # --------------------------------------------------------------------------
 
+def build_quant_versions(cfg, per_layer, *, seq_len: int,
+                         cuts: Tuple[int, ...],
+                         flops_scale: float = 1.0
+                         ) -> Tuple[VersionProfile, ...]:
+    """One VersionProfile per quant-registry entry, derived from the real
+    quantized execution path (shared by transformer_profile and
+    roofline_env.dryrun_profile):
+
+      accuracy     — baseline degraded by the version's measured
+                     quantization error (quant.versions.accuracy_proxy)
+      flops        — ``per_layer`` per-token FLOPs with the version's MXU
+                     cost scale applied ONLY to the dense-projection
+                     share (the part that really executes int8 x int8 at
+                     2x throughput); attention scores, MoE experts and
+                     SSM/LRU mixers stay full precision in execution and
+                     so in the tables. ``flops_scale`` carries dry-run
+                     calibration and covers the whole block.
+      out_bytes    — cut activation in the width the version ships:
+                     int8 for w8a8, else the config's compute dtype
+      weight_bytes — only the dense share prices at the version's code
+                     width; everything quantize_tree leaves alone (MoE
+                     experts, mixers, embeddings-free blocks) ships at
+                     the config's param-dtype width
+    """
+    from repro.core.transformer_cost import block_dense_flops, block_params
+    from repro.quant.versions import accuracy_proxy, get_version
+
+    dense_share = block_dense_flops(cfg)           # quantizable share
+    params_pl = block_params(cfg)
+    pw = cfg.pdtype.itemsize                       # full-precision widths
+    aw = cfg.cdtype.itemsize
+    # accuracy, like FLOPs and bytes, only degrades on the quantized share
+    dense_frac = sum(dense_share) / max(sum(per_layer), 1.0)
+    versions = []
+    for vname in cfg.versions:
+        qv = get_version(vname)
+        act_width = 1 if qv.act_bits == 8 else aw
+        act_bytes = cfg.d_model * act_width * seq_len
+        layers = []
+        for i, (f, df, p) in enumerate(zip(per_layer, dense_share,
+                                           params_pl)):
+            flops = (df * qv.matmul_cost_scale + (f - df)) \
+                * seq_len * flops_scale
+            dense_p = df / 2.0
+            if qv.mode is None:
+                wb = p * pw
+            else:
+                wb = dense_p * qv.bytes_per_param + (p - dense_p) * pw
+            layers.append(LayerProfile(f"block{i}", flops, act_bytes,
+                                       int(p), weight_bytes=wb))
+        versions.append(VersionProfile(
+            cfg.name, vname, accuracy_proxy(qv, dense_frac=dense_frac),
+            tuple(layers), cuts, bytes_per_param=qv.bytes_per_param))
+    return tuple(versions)
+
+
+def spread_cuts(n_layers: int, n_cuts: int) -> Tuple[int, ...]:
+    """Candidate cut layers at even fractional depths."""
+    return tuple(max(1, round(n_layers * (i + 1) / (n_cuts + 1)))
+                 for i in range(n_cuts))
+
+
 def transformer_profile(cfg, *, seq_len: int = 2048,
                         n_cuts: int = 4) -> ModelProfile:
     """Build an EdgeRL ModelProfile from a ModelConfig.
 
     Layer = one decoder block; activation at the cut = (seq, d_model).
-    Two versions when the config declares them (base vs sliding-window —
-    the SWA version trades long-range accuracy for bounded attention
-    compute, the transformer analogue of the paper's compressed variant).
+    The version axis is the *quantization level* of the same trunk
+    (repro.quant: bf16 / w8 / w4) — the transformer analogue of the
+    paper's compressed variants — with every table entry derived from the
+    real quantized execution path (see build_quant_versions).
     """
     from repro.core.transformer_cost import block_flops_per_token
 
-    versions = []
-    for vname in cfg.versions:
-        vcfg = cfg
-        acc = 0.75
-        if vname == "swa8k":
-            vcfg = cfg.with_overrides(sliding_window=8192)
-            acc = 0.71          # proxy: windowed version trades accuracy
-        per_layer = block_flops_per_token(vcfg)    # list, len n_layers
-        act_bytes = cfg.d_model * 2 * seq_len      # bf16 activation
-        layers = tuple(
-            LayerProfile(f"block{i}", f * seq_len, act_bytes, 0)
-            for i, f in enumerate(per_layer))
-        L = len(layers)
-        cuts = tuple(max(1, round(L * (i + 1) / (n_cuts + 1)))
-                     for i in range(n_cuts))
-        versions.append(VersionProfile(cfg.name, vname, acc, layers, cuts))
-    return ModelProfile(cfg.name, tuple(versions))
+    per_layer = block_flops_per_token(cfg)         # list, len n_layers
+    cuts = spread_cuts(len(per_layer), n_cuts)
+    versions = build_quant_versions(cfg, per_layer, seq_len=seq_len,
+                                    cuts=cuts)
+    return ModelProfile(cfg.name, versions)

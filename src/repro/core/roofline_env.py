@@ -21,7 +21,7 @@ from typing import Dict, Sequence, Tuple
 from repro.configs import SHAPES, get_config
 from repro.core.controller import _TPU_LATENCY, _TPU_POWER
 from repro.core.env import EnvConfig, ProfileTables, build_tables
-from repro.core.profiles import LayerProfile, ModelProfile, VersionProfile
+from repro.core.profiles import ModelProfile
 from repro.core.reward import RewardWeights
 
 
@@ -41,7 +41,15 @@ def _load_records(path: str) -> Dict[Tuple[str, str], dict]:
 
 def dryrun_profile(arch: str, records, *, shape: str = "prefill_32k",
                    n_cuts: int = 4) -> ModelProfile:
-    """ModelProfile whose total FLOPs equal the measured compiled FLOPs."""
+    """ModelProfile whose total FLOPs equal the measured compiled FLOPs.
+
+    The version axis is the repro.quant registry, like transformer_profile:
+    the bf16 FLOPs are calibrated to the measured compiled FLOPs, then each
+    quantized version applies its MXU cost scale on top of the calibrated
+    numbers (quantization changes the MAC throughput, not the compiled op
+    graph the dry-run measured). Version construction is shared with
+    transformer_profile (profiles.build_quant_versions)."""
+    from repro.core.profiles import build_quant_versions, spread_cuts
     from repro.core.transformer_cost import block_flops_per_token
 
     cfg = get_config(arch)
@@ -49,29 +57,17 @@ def dryrun_profile(arch: str, records, *, shape: str = "prefill_32k",
     info = SHAPES[shape]
     tokens = info["global_batch"] * info["seq_len"]
 
-    versions = []
-    for vname in cfg.versions:
-        vcfg = cfg if vname == "base" else cfg.with_overrides(
-            sliding_window=8192)
-        analytic = block_flops_per_token(vcfg, seq_ctx=info["seq_len"])
-        total_analytic = sum(analytic)
-        if rec and vname == "base":
-            # calibrate to the measured compiled FLOPs per token
-            measured_per_tok = rec["jaxpr_flops"] / tokens
-            scale = measured_per_tok / max(total_analytic, 1.0)
-        else:
-            scale = 1.0
-        per_tok_bytes = cfg.d_model * 2 * info["seq_len"]
-        layers = tuple(
-            LayerProfile(f"block{i}", f * scale * info["seq_len"],
-                         per_tok_bytes, 0)
-            for i, f in enumerate(analytic))
-        L = len(layers)
-        cuts = tuple(max(1, round(L * (i + 1) / (n_cuts + 1)))
-                     for i in range(n_cuts))
-        acc = 0.75 if vname == "base" else 0.71
-        versions.append(VersionProfile(arch, vname, acc, layers, cuts))
-    return ModelProfile(arch, tuple(versions))
+    analytic = block_flops_per_token(cfg, seq_ctx=info["seq_len"])
+    scale = 1.0
+    if rec:
+        # calibrate to the measured compiled FLOPs per token
+        measured_per_tok = rec["jaxpr_flops"] / tokens
+        scale = measured_per_tok / max(sum(analytic), 1.0)
+    versions = build_quant_versions(cfg, analytic,
+                                    seq_len=info["seq_len"],
+                                    cuts=spread_cuts(len(analytic), n_cuts),
+                                    flops_scale=scale)
+    return ModelProfile(arch, versions)
 
 
 def make_dryrun_tpu_env(arch_names: Sequence[str],

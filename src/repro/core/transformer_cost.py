@@ -59,11 +59,19 @@ def _rec_flops(cfg: ModelConfig) -> float:
     return float(f)
 
 
-def block_flops_per_token(cfg: ModelConfig, seq_ctx: int = None) -> List[float]:
-    """FLOPs per token per block, in layer order."""
-    ctx = seq_ctx if seq_ctx is not None else 2048
+def block_flops_per_token(cfg: ModelConfig, seq_ctx: int = None, *,
+                          weights_only: bool = False) -> List[float]:
+    """FLOPs per token per block, in layer order.
+
+    ``weights_only=True`` zeroes every attention-score context (self,
+    cross, media), leaving just the weight-matmul terms — so dividing by
+    2 gives a per-block *parameter count* that is independent of the
+    profiling shape (used for weight-shipping bytes)."""
+    ctx = 0 if weights_only else (seq_ctx if seq_ctx is not None else 2048)
     if cfg.sliding_window:
         ctx = min(ctx, cfg.sliding_window)
+    enc_ctx = 0 if weights_only else cfg.encoder_seq
+    media_ctx = 0 if weights_only else cfg.n_media_tokens
     out = []
     for i, kind in enumerate(cfg.layer_kinds()):
         if kind == "ssm":
@@ -71,18 +79,73 @@ def block_flops_per_token(cfg: ModelConfig, seq_ctx: int = None) -> List[float]:
         elif kind == "rec":
             out.append(_rec_flops(cfg) + _mlp_flops(cfg, cfg.d_ff))
         elif kind == "xattn":
-            out.append(_attn_flops(cfg, cfg.n_media_tokens)
+            out.append(_attn_flops(cfg, media_ctx)
                        + _mlp_flops(cfg, cfg.d_ff))
         elif cfg.enc_dec:
             # whisper decoder block: self-attn + cross-attn(enc) + mlp
             out.append(_attn_flops(cfg, ctx)
-                       + _attn_flops(cfg, cfg.encoder_seq)
+                       + _attn_flops(cfg, enc_ctx)
                        + _mlp_flops(cfg, cfg.d_ff))
         else:
             lctx = min(ctx, cfg.local_window) if cfg.block_pattern else ctx
             mlp = (_moe_flops(cfg) if (cfg.moe and i >= cfg.first_dense_layers)
                    else _mlp_flops(cfg, cfg.d_ff if cfg.d_ff else 4 * cfg.d_model))
             out.append(_attn_flops(cfg, lctx) + mlp)
+    return out
+
+
+def block_params(cfg: ModelConfig) -> List[float]:
+    """Per-block parameter-count estimate: weight-matmul FLOPs / 2 with
+    all attention contexts zeroed (shape-independent, unlike raw FLOPs).
+
+    MoE layers are corrected to count ALL experts — FLOPs only touch the
+    routed top-k, but shipping/storing a layer moves every expert."""
+    out = [f / 2.0 for f in block_flops_per_token(cfg, weights_only=True)]
+    if cfg.moe:
+        inactive = 3.0 * cfg.d_model * cfg.moe_d_ff \
+            * (cfg.n_experts - cfg.top_k)
+        for i, kind in enumerate(cfg.layer_kinds()):
+            if kind == "attn" and i >= cfg.first_dense_layers:
+                out[i] += inactive
+    return out
+
+
+def _attn_proj_flops(cfg: ModelConfig) -> float:
+    """Projection-only attention FLOPs that route through layers.dense.
+
+    For MLA only wq/wo are dense-consumed (w_dkv/w_uk/w_uv are
+    reshaped/einsum'd and stay full precision under quantization)."""
+    d, Dh = cfg.d_model, cfg.resolved_head_dim
+    H, HK = cfg.n_heads, cfg.n_kv_heads
+    if cfg.use_mla:
+        qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        return 2.0 * d * H * qd + 2.0 * H * cfg.v_head_dim * d
+    return 2.0 * d * H * Dh + 2.0 * 2 * d * HK * Dh + 2.0 * H * Dh * d
+
+
+def block_dense_flops(cfg: ModelConfig) -> List[float]:
+    """Per-block FLOPs of the dense-consumed projections — the share that
+    actually executes with QTensor weights under a quantized version
+    (mirrors quant.quantize.DENSE_WEIGHTS + the moe-subtree exclusion).
+    Attention scores, MoE experts and SSM/LRU mixers are NOT in this
+    share; version FLOP scaling must only touch these terms."""
+    out = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind == "ssm":
+            out.append(0.0)                       # mixer is einsum-consumed
+        elif kind == "rec":
+            out.append(_mlp_flops(cfg, cfg.d_ff))  # mixer excluded, MLP in
+        elif kind == "xattn":
+            out.append(_attn_proj_flops(cfg) + _mlp_flops(cfg, cfg.d_ff))
+        elif cfg.enc_dec:
+            # self-attn + cross-attn projections + mlp
+            out.append(2.0 * _attn_proj_flops(cfg)
+                       + _mlp_flops(cfg, cfg.d_ff))
+        else:
+            moe_layer = cfg.moe and i >= cfg.first_dense_layers
+            mlp = 0.0 if moe_layer else _mlp_flops(
+                cfg, cfg.d_ff if cfg.d_ff else 4 * cfg.d_model)
+            out.append(_attn_proj_flops(cfg) + mlp)
     return out
 
 

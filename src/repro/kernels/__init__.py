@@ -5,6 +5,7 @@
   flash_decode    — single-token ring-cache decode attention (positional mask)
   mamba_scan      — Mamba-1 selective scan, VMEM-resident state tiles
   rglru_scan      — RG-LRU diagonal linear recurrence
+  quant_matmul    — int8 x int8 -> int32 matmul with f32 rescale (repro.quant)
 
 Set REPRO_USE_PALLAS=interpret (CPU validation) or =tpu (hardware) to route
 the models through the kernels; unset -> pure-jnp reference path.
@@ -12,8 +13,9 @@ the models through the kernels; unset -> pure-jnp reference path.
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.quant_matmul import quant_matmul, quant_matmul_ref
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels import ops, ref
 
 __all__ = ["flash_attention", "flash_decode", "mamba_scan", "rglru_scan",
-           "ops", "ref"]
+           "quant_matmul", "quant_matmul_ref", "ops", "ref"]

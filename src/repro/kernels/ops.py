@@ -15,8 +15,11 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.mamba_scan import mamba_scan as _mamba_scan
+from repro.kernels.quant_matmul import quant_matmul as _quant_matmul
+from repro.kernels.quant_matmul import quant_matmul_ref as _quant_matmul_ref
 from repro.kernels.rglru_scan import rglru_scan as _rglru_scan
 from repro.kernels import ref
+from repro.quant.quantize import QTensor, quantize_act
 
 
 def use_pallas() -> Optional[str]:
@@ -24,6 +27,31 @@ def use_pallas() -> Optional[str]:
     if v in ("interpret", "tpu"):
         return v
     return None
+
+
+def quantized_dense(x, w: QTensor):
+    """Dense projection against a quantized weight leaf.
+
+    Weight-only leaves (w8 / packed w4) dequantize to f32 and use the
+    plain matmul; w8a8 leaves quantize the activations per row and run the
+    int8 x int8 -> int32 path — the Pallas kernel when REPRO_USE_PALLAS is
+    set, the jnp oracle otherwise. models/layers.py::dense routes every
+    dense projection here, so a quantized param tree changes no model code.
+    """
+    if w.act_bits == 8 and w.bits == 8:
+        xq, xs = quantize_act(x)
+        lead = x.shape[:-1]
+        xq2 = xq.reshape(-1, x.shape[-1])
+        xs2 = xs.reshape(-1)
+        ws = w.scale.reshape(-1)
+        mode = use_pallas()
+        if mode:
+            out = _quant_matmul(xq2, w.q, xs2, ws,
+                                interpret=(mode == "interpret"))
+        else:
+            out = _quant_matmul_ref(xq2, w.q, xs2, ws)
+        return out.reshape(*lead, -1).astype(x.dtype)
+    return x @ w.dequantize().astype(x.dtype)
 
 
 def attention_bhsd(q, k, v, *, causal=True, window=None, logit_scale=None):

@@ -1,0 +1,93 @@
+"""Quantized matmul (int8 x int8 -> int32, f32 rescale) as a Pallas TPU kernel.
+
+Grid = (M/bm, N/bn, K/bk) with the K dimension innermost and sequential:
+each (i, j) tile accumulates int8 dot products into an int32 VMEM scratch
+(the MXU's native int8 path — 2x the bf16 MAC throughput on v5e), then
+rescales once with the per-row activation scale and per-column weight scale
+on the last K step. Block defaults (128) align with the MXU's 128-lane
+tiles; int8 min tile is (32, 128) so 128-padded operands are always legal.
+
+TPU is the TARGET; correctness is validated on CPU with interpret=True
+against ``quant_matmul_ref`` (pure jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_scr, *, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]                               # (bm, bk) int8
+    w = w_ref[...]                               # (bk, bn) int8
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out = acc_scr[...].astype(jnp.float32)
+        o_ref[...] = out * xs_ref[...] * ws_ref[...]   # (bm,1) * (1,bn)
+
+
+def quant_matmul_ref(x_q, w_q, x_scale, w_scale):
+    """jnp oracle: x_q (M,K) int8, w_q (K,N) int8, x_scale (M,), w_scale (N,).
+
+    Returns f32 (M, N) = (x_q @ w_q) * x_scale[:,None] * w_scale[None,:]
+    with the integer dot accumulated exactly in int32."""
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul(x_q, w_q, x_scale, w_scale, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool = True):
+    """Pallas int8 matmul. Same contract as ``quant_matmul_ref``."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    # Never shrink blocks below the int8 minimum tile (32, 128): small
+    # operands are padded UP to one full block instead, so the same
+    # BlockSpecs lower on hardware and in interpret mode alike.
+
+    def pad(a, blk, axis):
+        p = (-a.shape[axis]) % blk
+        if p == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, p)
+        return jnp.pad(a, widths)
+
+    x_ = pad(pad(x_q, bm, 0), bk, 1)
+    w_ = pad(pad(w_q, bk, 0), bn, 1)
+    xs_ = pad(x_scale.reshape(-1, 1).astype(jnp.float32), bm, 0)
+    ws_ = pad(w_scale.reshape(1, -1).astype(jnp.float32), bn, 1)
+    nm, nn, nk = x_.shape[0] // bm, w_.shape[1] // bn, x_.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x_.shape[0], w_.shape[1]),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_, w_, xs_, ws_)
+    return out[:M, :N]

@@ -19,14 +19,15 @@ from repro.launch import shardings as sh
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
-LONG_WINDOW = 8192   # sliding window used by the "swa8k" long-context version
+LONG_WINDOW = 8192   # sliding window applied for long-context shapes
 
 
 def config_for_shape(cfg: ModelConfig, shape_name: str) -> ModelConfig:
-    """Pick the execution *version* of the model for an input shape.
+    """Shape-compatibility overrides for an input shape.
 
     long_500k requires sub-quadratic attention: archs whose config declares
-    no window get the "swa8k" sliding-window version (EdgeRL's version knob).
+    no window get an 8k sliding-window override. This is decoupled from
+    cfg.versions (the EdgeRL version axis, now the repro.quant registry);
     SSM/hybrid archs run natively.
     """
     if shape_name == "long_500k" and not cfg.ssm:

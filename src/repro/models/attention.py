@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.params import P
 from repro.models import attention_core as ac
-from repro.models.layers import apply_rope, rms_norm_headwise
+from repro.models.layers import apply_rope, dense, rms_norm_headwise
 
 
 # --------------------------------------------------------------------------
@@ -123,9 +123,9 @@ def apply_self_attn(cfg: ModelConfig, p, x, *, pos0, mode: str,
                           window=window, cache_len=cache_len)
     Dh, H, HK = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
 
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = dense(x, p["wq"])
+    k = dense(x, p["wk"])
+    v = dense(x, p["wv"])
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q, k, v = _heads(q, H, Dh), _heads(k, HK, Dh), _heads(v, HK, Dh)
@@ -162,7 +162,7 @@ def apply_self_attn(cfg: ModelConfig, p, x, *, pos0, mode: str,
             C = cache_len if cache_len is not None else S
             new_cache = {"k": ring_from_prefill(k, C),
                          "v": ring_from_prefill(v, C)}
-    out = out.reshape(B, S, H * Dh) @ p["wo"]
+    out = dense(out.reshape(B, S, H * Dh), p["wo"])
     if "bo" in p:
         out = out + p["bo"]
     return out, new_cache
@@ -178,7 +178,7 @@ def _apply_mla(cfg: ModelConfig, p, x, *, pos0, mode, cache, window,
     vd, R = cfg.v_head_dim, cfg.kv_lora_rank
     positions = pos0 + jnp.arange(S, dtype=jnp.int32)
 
-    q = _heads(x @ p["wq"], H, nope + rope)
+    q = _heads(dense(x, p["wq"]), H, nope + rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -235,7 +235,7 @@ def _apply_mla(cfg: ModelConfig, p, x, *, pos0, mode, cache, window,
             C = cache_len if cache_len is not None else S
             new_cache = {"ckv": ring_from_prefill(ckv, C),
                          "krope": ring_from_prefill(krope[:, :, 0, :], C)}
-    out = out.reshape(B, S, H * vd) @ p["wo"]
+    out = dense(out.reshape(B, S, H * vd), p["wo"])
     return out, new_cache
 
 
@@ -244,15 +244,15 @@ def apply_cross_attn(cfg: ModelConfig, p, x, *, kv_src=None, cache=None):
     when a precomputed {"xk","xv"} cache is supplied. Returns (out, cache)."""
     B, S, _ = x.shape
     Dh, H, HK = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
-    q = x @ p["wq"]
+    q = dense(x, p["wq"])
     if "bq" in p:
         q = q + p["bq"]
     q = _heads(q, H, Dh)
     if cache is not None and kv_src is None:
         k, v = cache["xk"], cache["xv"]
     else:
-        k = _heads(kv_src @ p["wk"], HK, Dh)
-        v = kv_src @ p["wv"]
+        k = _heads(dense(kv_src, p["wk"]), HK, Dh)
+        v = dense(kv_src, p["wv"])
         if "bv" in p:
             v = v + p["bv"]
         v = _heads(v, HK, Dh)
@@ -262,7 +262,7 @@ def apply_cross_attn(cfg: ModelConfig, p, x, *, kv_src=None, cache=None):
     kv_pos = jnp.zeros((Skv,), jnp.int32)
     out = ac.attention(q, k, v, q_positions=zero, kv_positions=kv_pos,
                        causal=False, window=None)
-    out = out.reshape(B, S, H * Dh) @ p["wo"]
+    out = dense(out.reshape(B, S, H * Dh), p["wo"])
     if "bo" in p:
         out = out + p["bo"]
     return out, cache

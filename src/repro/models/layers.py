@@ -8,6 +8,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.params import P
+from repro.quant.quantize import QTensor
+
+
+def dense(x, w):
+    """``x @ w`` where w may be a quantized ``QTensor`` leaf.
+
+    The quantized path dispatches through kernels/ops.py (REPRO_USE_PALLAS
+    selects the Pallas int8 kernel); the import is deferred because
+    kernels -> ref -> ssm imports this module at package-init time.
+    """
+    if isinstance(w, QTensor):
+        from repro.kernels import ops
+        return ops.quantized_dense(x, w)
+    return x @ w
 
 
 # --------------------------------------------------------------------------
@@ -64,16 +78,16 @@ def plan_mlp(cfg: ModelConfig, d_in: Optional[int] = None,
 
 def apply_mlp(cfg: ModelConfig, p, x):
     if "w_gate" in p:
-        g = x @ p["w_gate"]
-        u = x @ p["w_up"]
+        g = dense(x, p["w_gate"])
+        u = dense(x, p["w_up"])
         act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
         h = act(g) * u
     else:
-        h = x @ p["w_up"]
+        h = dense(x, p["w_up"])
         if "b_up" in p:
             h = h + p["b_up"]
         h = jax.nn.gelu(h)
-    y = h @ p["w_down"]
+    y = dense(h, p["w_down"])
     if "b_down" in p:
         y = y + p["b_down"]
     return y

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import params as pp
 from repro.models.params import P
-from repro.models.layers import plan_norm, apply_norm, sinusoidal_positions
+from repro.models.layers import (plan_norm, apply_norm, dense,
+                                 sinusoidal_positions)
+from repro.quant.quantize import QTensor
 from repro.models.blocks import plan_block, apply_block
 
 
@@ -238,7 +240,10 @@ def _head(cfg: ModelConfig, params, h):
     if cfg.tie_embeddings:
         return jnp.einsum("...d,vd->...v", h,
                           params["tok_embed"].astype(h.dtype))
-    return h @ params["lm_head"].astype(h.dtype)
+    w = params["lm_head"]
+    if not isinstance(w, QTensor):
+        w = w.astype(h.dtype)
+    return dense(h, w)
 
 
 # --------------------------------------------------------------------------

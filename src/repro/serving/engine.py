@@ -13,7 +13,7 @@ The two jits exercise exactly the partition the paper's Fig. 1 shows.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,28 +75,65 @@ class ServingEngine:
 class SplitServingEngine:
     """EdgeRL-routed split inference (single forward; classification-style
     scoring of the last position, mirroring the paper's object-classifier
-    workload on transformers)."""
+    workload on transformers).
 
-    def __init__(self, cfg: ModelConfig, params):
+    The engine holds one param tree per *quant version* (repro.quant:
+    bf16 / w8 / w4), so the controller's full (version j, cut l) action is
+    executable: the chosen version's quantized head runs on the device
+    side, the cut activation crosses the link (int8 + scales when the
+    version quantizes activations), the matching tail finishes it."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 versions: Sequence[str] = ("bf16",)):
+        from repro.quant import get_version
+
         self.cfg = cfg
         self.params = params
+        self.versions = tuple(versions)
+        for v in self.versions:
+            get_version(v)           # validate names up front
+        self._vparams = {}           # built lazily on first infer()
         self._heads = {}
         self._tails = {}
 
-    def _fns(self, cut: Tuple[str, int]):
-        if cut not in self._heads:
-            cfg, params = self.cfg, self.params
-            self._heads[cut] = jax.jit(
-                lambda p, b: partition.run_head(cfg, p, b, cut))
-            self._tails[cut] = jax.jit(
-                lambda p, a, b: partition.run_tail(cfg, p, a, b, cut))
-        return self._heads[cut], self._tails[cut]
+    def _params_for(self, version: str):
+        if version not in self.versions:
+            raise KeyError(f"version {version!r} not enabled; have "
+                           f"{sorted(self.versions)}")
+        if version not in self._vparams:
+            from repro.quant import build_version_params
+            self._vparams[version] = build_version_params(
+                self.cfg, self.params, (version,))[version]
+        return self._vparams[version]
 
-    def infer(self, batch: Dict, cut: Tuple[str, int]):
+    def _fns(self, cut: Tuple[str, int], version: str):
+        key = (cut, version)
+        if key not in self._heads:
+            cfg = self.cfg
+            self._heads[key] = jax.jit(
+                lambda p, b: partition.run_head(cfg, p, b, cut))
+            self._tails[key] = jax.jit(
+                lambda p, a, b: partition.run_tail(cfg, p, a, b, cut))
+        return self._heads[key], self._tails[key]
+
+    def infer(self, batch: Dict, cut: Tuple[str, int],
+              version: str = "bf16"):
         """Returns (logits, cut_activation_bytes) — the activation is what
-        crosses the device->server link; its size feeds the EdgeRL env."""
-        head, tail = self._fns(cut)
-        act = head(self.params, batch)
-        act_bytes = act.size * act.dtype.itemsize
-        logits = tail(self.params, act, batch)
+        crosses the device->server link; its *measured* size feeds back
+        into the EdgeRL env's cut_bytes axis."""
+        from repro.quant import get_version, quantize_act
+
+        params = self._params_for(version)
+        head, tail = self._fns(cut, version)
+        act = head(params, batch)
+        if get_version(version).act_bits == 8:
+            # the link carries int8 codes + per-row scales, like the
+            # w8a8 matmuls inside the trunk
+            q, s = quantize_act(act)
+            act_bytes = (q.size * q.dtype.itemsize
+                         + s.size * s.dtype.itemsize)
+            act = (q.astype(jnp.float32) * s).astype(act.dtype)
+        else:
+            act_bytes = act.size * act.dtype.itemsize
+        logits = tail(params, act, batch)
         return logits, act_bytes

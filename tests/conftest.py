@@ -4,6 +4,88 @@ import os
 # dry-run, sets --xla_force_host_platform_device_count=512 itself).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# ---------------------------------------------------------------------------
+# hypothesis shim: the property tests hard-import hypothesis, which is a dev
+# extra (requirements-dev.txt). Without it, install a minimal deterministic
+# stand-in BEFORE the test modules import: @given runs the test over the
+# cartesian product of a few boundary samples per strategy instead of
+# randomized search. Real hypothesis, when present, is used untouched.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import functools
+    import inspect
+    import itertools
+    import sys
+    import types
+
+    class _Samples:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    def _integers(min_value, max_value):
+        mid = min_value + (max_value - min_value) // 2
+        return _Samples(dict.fromkeys([min_value, mid, max_value]))
+
+    def _floats(min_value, max_value):
+        return _Samples(dict.fromkeys(
+            [min_value, (min_value + max_value) / 2.0, max_value]))
+
+    _MAX_COMBOS = 32
+
+    def _given(**strategies):
+        names = list(strategies)
+        combos = list(itertools.product(
+            *(strategies[n].samples for n in names)))
+        if len(combos) > _MAX_COMBOS:
+            # evenly-spaced deterministic subsample: keeps the boundary
+            # mix without the cartesian blowup on many-strategy tests
+            step = len(combos) / _MAX_COMBOS
+            combos = [combos[int(i * step)] for i in range(_MAX_COMBOS)]
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                for combo in combos:
+                    fn(*args, **dict(zip(names, combo)), **kwargs)
+            # hide the strategy params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(parameters=[
+                p for n, p in sig.parameters.items() if n not in names])
+            del run.__wrapped__
+            return run
+        return deco
+
+    def _settings(**kwargs):
+        return lambda fn: fn
+
+    def _none():
+        return _Samples([None])
+
+    def _one_of(*strategies):
+        samples = []
+        for s in strategies:
+            samples.extend(s.samples)
+        return _Samples(dict.fromkeys(samples))
+
+    def _sampled_from(values):
+        return _Samples(values)
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.none = _none
+    _st.one_of = _one_of
+    _st.sampled_from = _sampled_from
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_repro_shim__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 import jax
 import numpy as np
 import pytest
