@@ -1,5 +1,7 @@
 """Benchmark harness — one function per paper table/figure (+ system
-benches). Prints ``name,us_per_call,derived`` CSV rows.
+benches). Prints ``name,us_per_call,derived`` CSV rows and writes the
+same rows as machine-readable JSON (``--json``, default
+BENCH_results.json) so CI can archive a perf trajectory.
 
 Paper artifacts:
   table1_profiles       — Table I: candidate cut points + activation bytes
@@ -25,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
 
 import jax
@@ -32,11 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS = []
+RECORDS = []
 
 
 def row(name: str, us_per_call: float, derived: str):
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(line, flush=True)
 
 
@@ -320,6 +326,62 @@ def continuous_batching():
         f"prefills={srv.stats.prefills}")
 
 
+def scheduler_throughput():
+    """Continuous-batching tokens/s with mixed-length requests — the
+    slot-refill path (individual retirement) is on the hot loop."""
+    from repro.configs import get_config
+    from repro.models import init
+    from repro.serving.scheduler import ContinuousBatchingServer, Request
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = init(cfg, jax.random.key(0))
+    # one server across warm + timed runs: its jitted prefill/decode
+    # closures (and their per-batch-size compile cache) live on the
+    # instance, so a fresh server per run would re-compile in the timed
+    # region; reseeding the rng repeats the exact request shapes
+    srv = ContinuousBatchingServer(cfg, params, max_batch=4, cache_len=64)
+
+    def one_run():
+        r = np.random.default_rng(0)
+        for i in range(12):
+            srv.submit(Request(rid=i, tokens=r.integers(
+                0, cfg.vocab_size, int(r.integers(4, 12))).astype(np.int32),
+                max_new_tokens=int(r.integers(3, 12))))
+        done = srv.run()
+        return sum(len(q.out) for q in done)
+
+    one_run()                       # warm the jits
+    warm_reclaims = srv.stats.slot_reclaims
+    warm_prefills = srv.stats.prefills
+    t0 = time.perf_counter()
+    toks = one_run()
+    dt = time.perf_counter() - t0
+    summ = srv.stats.latency_summary()
+    row("scheduler_throughput", dt / max(toks, 1) * 1e6,
+        f"per_token,tok_per_s={toks/dt:.0f} "
+        f"reclaims={srv.stats.slot_reclaims - warm_reclaims} "
+        f"prefills={srv.stats.prefills - warm_prefills} "
+        f"p95_e2e_steps={summ['p95']:.0f}")
+
+
+def fleet_sim(n_requests=100_000):
+    """repro.sim throughput: analytical-backend requests/s + epochs/s."""
+    from repro.core import make_paper_env
+    from repro.core.baselines import POLICIES
+    from repro.sim import FleetConfig, PoissonTrace, simulate
+    cfg, tables = make_paper_env(n_uavs=8, slot_seconds=10.0)
+    trace = PoissonTrace(rate_rps=15.0)
+    kw = dict(n_requests=n_requests, seed=0, fleet=FleetConfig(slo_s=1.0))
+    simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)  # warm
+    t0 = time.perf_counter()
+    res = simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)
+    dt = time.perf_counter() - t0
+    s = res.summary
+    row("fleet_sim", dt / max(res.epochs, 1) * 1e6,
+        f"per_epoch,req_per_s={res.served/dt:.0f} epochs_per_s="
+        f"{res.epochs/dt:.1f} requests={res.served} "
+        f"p95_s={s['p95']:.3f} slo_att={s['slo_attainment']:.3f}")
+
+
 def kernels_interpret():
     from repro.kernels.flash_attention import flash_attention
     r = np.random.default_rng(0)
@@ -370,6 +432,7 @@ ALL = [table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
        a2c_convergence, ablation_a2c, ablation_agents, roofline_suite,
        hillclimb_variants,
        serving_decode, split_inference, continuous_batching,
+       scheduler_throughput, fleet_sim,
        kernels_interpret, quant_matmul]
 
 
@@ -379,6 +442,8 @@ def main() -> None:
     ap.add_argument("--agent", action="store_true",
                     help="run sweeps with trained A2C agents (slow)")
     ap.add_argument("--episodes", type=int, default=200)
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="write rows as JSON here ('' disables)")
     args = ap.parse_args()
     known = {fn.__name__ for fn in ALL}
     selected = args.only.split(",") if args.only else None
@@ -402,6 +467,13 @@ def main() -> None:
         except Exception as e:   # noqa: BLE001 - report but keep benching
             row(fn.__name__, -1.0, f"ERROR={type(e).__name__}:{e}")
             errors += 1
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "unix_time": time.time(),
+                       "argv": sys.argv[1:], "errors": errors,
+                       "rows": RECORDS}, f, indent=2)
+        print(f"wrote {args.json} ({len(RECORDS)} rows)", flush=True)
     if errors:
         raise SystemExit(1)   # make ERROR rows visible to CI
 

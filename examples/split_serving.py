@@ -62,7 +62,8 @@ def main():
         j, k = int(actions[0, 0]), int(actions[0, 1])
         version, cut = resolve_selection(cfg, profile, j, k)
         logits, nbytes = engine.infer(batch, cut, version)
-        _, _, _, t_total, e_inf = action_costs(env_cfg, tables, state, actions)
+        costs = action_costs(env_cfg, tables, state, actions)
+        t_total, e_inf = costs[3], costs[4]
         print(f"{t:4d} {version:>5} {str(cut):>12} {nbytes:10d} "
               f"{float(t_total[0])*1e3:10.2f} {float(e_inf[0]):8.3f}")
         rng, k_env = jax.random.split(rng)

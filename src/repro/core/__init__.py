@@ -10,8 +10,9 @@ from repro.core.reward import RewardWeights
 from repro.core.a2c import A2CConfig, train, init_agent, make_train_episode
 from repro.core.profiles import paper_profiles, transformer_profile
 from repro.core.controller import (make_paper_env, make_tpu_env,
-                                   resolve_selection, train_agent,
-                                   evaluate_policy, decide, agent_policy)
+                                   measured_state, resolve_selection,
+                                   train_agent, evaluate_policy, decide,
+                                   agent_policy)
 from repro.core.roofline_env import make_dryrun_tpu_env
 
 __all__ = [
@@ -19,6 +20,6 @@ __all__ = [
     "env_reset", "env_step", "observe", "RewardWeights", "A2CConfig",
     "train", "init_agent", "make_train_episode", "paper_profiles",
     "transformer_profile", "make_paper_env", "make_tpu_env",
-    "resolve_selection", "train_agent", "evaluate_policy", "decide",
-    "agent_policy", "make_dryrun_tpu_env",
+    "measured_state", "resolve_selection", "train_agent",
+    "evaluate_policy", "decide", "agent_policy", "make_dryrun_tpu_env",
 ]

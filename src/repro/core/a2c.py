@@ -118,7 +118,13 @@ def _logp_entropy(params, obs_flat, actions, valid_v):
 
 def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
                        ac: A2CConfig, model_ids=None):
-    """Returns jitted (params, opt_state, rng) -> (params, opt_state, stats)."""
+    """Returns jitted (params, opt_state, rng[, task_seq]) ->
+    (params, opt_state, stats).
+
+    ``task_seq``, when given, is an (episode_len, n) array of per-slot
+    offered load in [0, 1] that replaces the env's Bernoulli task draw
+    (env_step's next_task hook) — used to train the agent against
+    trace-driven traffic (repro.sim.traces)."""
     opt = AdamWConfig(lr=ac.lr, weight_decay=0.0, warmup_steps=0,
                       total_steps=ac.episodes, grad_clip=1.0,
                       min_lr_ratio=1.0)
@@ -128,19 +134,21 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
     def valid_v(state):
         return tables.version_valid[state["model_id"]]   # (n, V)
 
-    def rollout(params, state0, rng):
-        def step(carry, k):
+    def rollout(params, state0, rng, task_seq=None):
+        def step(carry, xs):
             state = carry
+            k, nxt = xs
             obs = observe(env_cfg, tables, state).reshape(-1)
             actions = sample_actions(params, obs, valid_v(state), k)
             k_env = jax.random.fold_in(k, 1)
-            state2, r, info = env_step(env_cfg, tables, state, actions, k_env)
+            state2, r, info = env_step(env_cfg, tables, state, actions,
+                                       k_env, next_task=nxt)
             out = {"obs": obs, "actions": actions, "reward": r,
                    "valid": valid_v(state), "alive": info["alive"],
                    "battery": info["battery"]}
             return state2, out
         keys = jax.random.split(rng, env_cfg.episode_len)
-        state_T, traj = jax.lax.scan(step, state0, keys)
+        state_T, traj = jax.lax.scan(step, state0, (keys, task_seq))
         return state_T, traj
 
     def returns_from(traj, bootstrap, gamma):
@@ -168,10 +176,15 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
                       "entropy": ent_mean}
 
     @jax.jit
-    def train_episode(params, opt_state, rng):
+    def train_episode(params, opt_state, rng, task_seq=None):
         k0, k1, k2 = jax.random.split(rng, 3)
         state0 = env_reset(env_cfg, tables, k0, model_ids=model_ids)
-        state_T, traj = rollout(params, state0, k1)
+        if task_seq is not None:
+            # slot t's load is task_seq[t]: seed state0 with row 0 and
+            # let env_step's next_task install rows 1..T-1 (last repeats)
+            state0 = dict(state0, task=task_seq[0])
+            task_seq = jnp.concatenate([task_seq[1:], task_seq[-1:]])
+        state_T, traj = rollout(params, state0, k1, task_seq)
         obs_T = observe(env_cfg, tables, state_T).reshape(-1)
         bootstrap = critic_apply(params, obs_T)
         rets = returns_from(traj, bootstrap, ac.gamma)
@@ -189,14 +202,22 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
 
 
 def train(env_cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig,
-          rng, model_ids=None, log_every: int = 0):
+          rng, model_ids=None, log_every: int = 0, task_sampler=None):
+    """``task_sampler(episode) -> (episode_len, n_uavs)`` array, when
+    given, supplies each episode's offered-load sequence (trace-driven
+    training; see controller.train_agent's ``trace`` argument)."""
     params = init_agent(env_cfg, tables, ac, rng)
     opt_state = adamw_init(params)
     step = make_train_episode(env_cfg, tables, ac, model_ids=model_ids)
     history = []
     for ep in range(ac.episodes):
         rng, k = jax.random.split(rng)
-        params, opt_state, stats = step(params, opt_state, k)
+        if task_sampler is None:
+            params, opt_state, stats = step(params, opt_state, k)
+        else:
+            params, opt_state, stats = step(
+                params, opt_state, k,
+                jnp.asarray(task_sampler(ep), jnp.float32))
         history.append({k2: float(v) for k2, v in stats.items()})
         if log_every and (ep + 1) % log_every == 0:
             print(f"ep {ep+1:4d} reward={history[-1]['mean_reward']:+.4f} "

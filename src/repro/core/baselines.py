@@ -48,9 +48,11 @@ def greedy_oracle(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
 
     def score(pair):
         actions = jnp.tile(pair[None], (n, 1))
-        acc_s, lat_s, en_s, _, _ = action_costs(cfg, tables, state, actions)
+        acc_s, lat_s, en_s, _, _, stab_s = action_costs(
+            cfg, tables, state, actions)
         valid = tables.version_valid[state["model_id"], pair[0]]
-        s = w.w_acc * acc_s + w.w_lat * lat_s + w.w_energy * en_s
+        s = (w.w_acc * acc_s + w.w_lat * lat_s + w.w_energy * en_s
+             + w.w_stab * stab_s)
         return jnp.where(valid > 0, s, -jnp.inf)
 
     scores = jax.vmap(score)(pairs)          # (VK, n)

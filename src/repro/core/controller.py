@@ -27,10 +27,13 @@ from repro.core.reward import RewardWeights
 
 
 def make_paper_env(weights: RewardWeights = RewardWeights(),
+                   n_uavs: int = 3,
                    **env_kw) -> Tuple[EnvConfig, ProfileTables]:
+    """The paper's testbed (3 UAVs); ``n_uavs`` scales the fleet — model
+    assignment cycles through {vgg, resnet, densenet} like env_reset."""
     profs = paper_profiles()
     tables = build_tables([profs["vgg"], profs["resnet"], profs["densenet"]])
-    cfg = EnvConfig(n_uavs=3, weights=weights.normalized(), **env_kw)
+    cfg = EnvConfig(n_uavs=n_uavs, weights=weights.normalized(), **env_kw)
     return cfg, tables
 
 
@@ -97,9 +100,31 @@ def resolve_selection(model_cfg, profile, j: int, k: int):
 
 def train_agent(cfg: EnvConfig, tables: ProfileTables,
                 ac: A2C.A2CConfig = A2C.A2CConfig(), seed: int = 0,
-                log_every: int = 0):
+                log_every: int = 0, trace=None):
+    """Train the A2C controller; ``trace`` (a repro.sim.traces.Trace)
+    switches the episode's task feature from the Bernoulli draw to
+    trace-driven offered load — counts / (slot * peak_rps), the same
+    normalization the fleet simulator feeds ``measured_state`` — so the
+    agent learns what bursts look like before it meets them online.
+    Requires cfg.peak_rps > 0. For battery-drain parity with the
+    per-request fleet metering, set cfg.frames_per_slot =
+    slot_seconds * peak_rps (one frame per request at saturation)."""
+    task_sampler = None
+    if trace is not None:
+        if cfg.peak_rps <= 0:
+            raise ValueError("trace-driven training needs cfg.peak_rps > 0 "
+                             "to normalize counts into the load feature")
+
+        def task_sampler(episode):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([seed, episode]))
+            gen = trace.stream(rng, cfg.n_uavs, cfg.slot_seconds)
+            rows = [next(gen) for _ in range(cfg.episode_len)]
+            return np.clip(np.asarray(rows, dtype=np.float32)
+                           / (cfg.slot_seconds * cfg.peak_rps), 0.0, 1.0)
+
     return A2C.train(cfg, tables, ac, jax.random.key(seed),
-                     log_every=log_every)
+                     log_every=log_every, task_sampler=task_sampler)
 
 
 def decide(params, cfg: EnvConfig, tables: ProfileTables, state):
@@ -107,6 +132,36 @@ def decide(params, cfg: EnvConfig, tables: ProfileTables, state):
     obs = observe(cfg, tables, state).reshape(-1)
     valid = tables.version_valid[state["model_id"]]
     return A2C.greedy_actions(params, obs, valid)
+
+
+def measured_state(cfg: EnvConfig, tables: ProfileTables, *,
+                   battery_j, bandwidth, p_tx, queue_jobs, load,
+                   model_id=None, activity=None, t: int = 0) -> Dict:
+    """Assemble the env-state dict ``observe``/``decide`` consume from
+    quantities a fleet actually measures online: remaining battery (J),
+    link bandwidth (bps), transmit power (W), server queue depth (jobs)
+    and per-device offered load in [0, 1] (observed arrival rate over a
+    nominal capacity — Eq. 6's task-availability alpha generalized to a
+    measured utilization). This is how the trace-driven simulator
+    (repro.sim.fleet) runs the trained controller online each decision
+    epoch: no env rollout, just measurements in, (version, cut) out."""
+    battery_j = jnp.asarray(battery_j, jnp.float32)
+    n = battery_j.shape[0]
+    if model_id is None:
+        model_id = jnp.arange(n, dtype=jnp.int32) % tables.n_models
+    if activity is None:
+        activity = jnp.tile(jnp.asarray(cfg.activity, jnp.float32)[None],
+                            (n, 1))
+    return {
+        "battery_j": battery_j,
+        "task": jnp.clip(jnp.asarray(load, jnp.float32), 0.0, 1.0),
+        "p_tx": jnp.asarray(p_tx, jnp.float32),
+        "model_id": jnp.asarray(model_id, jnp.int32),
+        "activity": jnp.asarray(activity, jnp.float32),
+        "bandwidth": jnp.asarray(bandwidth, jnp.float32),
+        "queue": jnp.float32(queue_jobs),
+        "t": jnp.int32(t),
+    }
 
 
 def agent_policy(params):

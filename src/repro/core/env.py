@@ -1,10 +1,12 @@
 """EdgeEnv: the paper's ad-hoc edge MDP as a pure-JAX environment.
 
 State (Eq. 6) per UAV: battery level b in [0,10], task availability
-alpha in {0,1}, transmit power P_tx, model id m, and the activity mix
-(forward F, vertical V, rotation R) over the next slot. Shared state:
-per-UAV link bandwidth and the edge-server queue length (Poisson side
-workload -> Eq. 4 queue term).
+alpha in {0,1} (generalized to measured offered load in [0,1] when a
+workload trace drives the env — see env_step's next_task and
+EnvConfig.peak_rps), transmit power P_tx, model id m, and the activity
+mix (forward F, vertical V, rotation R) over the next slot. Shared
+state: per-UAV link bandwidth and the edge-server queue length (Poisson
+side workload by default, trace-injectable -> Eq. 4 queue term).
 
 Action (Eq. 7) per UAV: (version j, cut-point index l) into the profile
 tables. ``env_step`` is jit/scan-friendly: all dynamics are jnp ops on a
@@ -52,6 +54,12 @@ class EnvConfig:
     # of the tail weights (tables.tail_weight_bytes) over the link.
     # 0 disables the term (the paper's CNNs are pre-staged on the server).
     weight_ship_slots: float = 0.0
+    # Request rate (per device, requests/s) that saturates the task/load
+    # feature. When > 0, action_costs adds a stability score
+    # sigmoid(p_stab * (1 - u)) with u = task * peak_rps * service_s —
+    # the request-level capacity signal the per-slot paper scores lack
+    # (weighted by RewardWeights.w_stab; 0 keeps the paper's reward).
+    peak_rps: float = 0.0
     power: en.DevicePower = dataclasses.field(default_factory=en.DevicePower)
     latency: lat.LatencyParams = dataclasses.field(
         default_factory=lat.LatencyParams)
@@ -167,8 +175,16 @@ def observe(cfg: EnvConfig, tables: ProfileTables, state) -> jnp.ndarray:
 
 
 def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
-    """Per-UAV (acc_score, lat_score, energy_score, t_total, e_infer) for
-    actions (n, 2) = (version j, cut index l)."""
+    """Per-UAV (acc_score, lat_score, energy_score, t_total, e_infer,
+    stab_score) for actions (n, 2) = (version j, cut index l).
+
+    stab_score is the beyond-paper stability term (reward.py): it reads
+    the task feature as offered load in [0, 1] of cfg.peak_rps and
+    scores whether this action's per-request device+link service time
+    can absorb it. It only enters the reward when RewardWeights.w_stab
+    > 0; with cfg.peak_rps == 0 the utilization is 0 and the score is a
+    constant sigmoid(p_stab) ~ 1 for every action — rankings and
+    advantages are unchanged, but set peak_rps when weighting it."""
     m = state["model_id"]
     j, k = actions[:, 0], actions[:, 1]
     head = tables.head_flops[m, j, k]
@@ -186,8 +202,16 @@ def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
     full = tables.full_flops[m, j]
 
     lp, pw, w = cfg.latency, cfg.power, cfg.weights
-    t_total = lat.total_time(lp, head, tail, nbytes, state["bandwidth"],
-                             state["queue"])
+    # Eq. 5, with the server-side term (queue wait + tail compute) gated
+    # on a tail actually running there: a terminal cut executes entirely
+    # on-device and never visits the server queue. Charging T_queue to
+    # local execution (and normalizing by the small local baseline)
+    # would make congestion punish local *harder* than offload, driving
+    # every policy to offload into an already-saturated server.
+    t_remote = jnp.where(tail > 0.0,
+                         lat.remote_time(lp, tail, state["queue"]), 0.0)
+    t_total = (lat.local_time(lp, head)
+               + lat.transmit_time(state["bandwidth"], nbytes) + t_remote)
     t_full_local = lat.local_time(lp, full)
     e_comp = en.compute_energy(pw, lat.local_time(lp, head))
     e_trans = en.transmit_energy(state["p_tx"], state["bandwidth"], nbytes)
@@ -197,24 +221,44 @@ def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
     acc_s = rw.accuracy_score(w, acc)
     lat_s = rw.latency_score(t_total, t_full_local)
     en_s = rw.energy_score(e_infer, e_full_local)
-    return acc_s, lat_s, en_s, t_total, e_infer
+    # per-request service time the device serializes: head compute + link
+    service_s = lat.local_time(lp, head) + lat.transmit_time(
+        state["bandwidth"], nbytes)
+    util = state["task"] * cfg.peak_rps * service_s
+    stab_s = rw.stability_score(w, util)
+    return acc_s, lat_s, en_s, t_total, e_infer, stab_s
 
 
-def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng):
-    """One delta-slot. Returns (new_state, reward, info)."""
+def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng,
+             arrivals=None, next_task=None):
+    """One delta-slot. Returns (new_state, reward, info).
+
+    ``arrivals`` injects this slot's server-side job arrivals (scalar,
+    jit-traceable) from an external workload trace (repro.sim.traces);
+    None keeps the homogeneous Poisson(queue_arrival_rate) draw. This is
+    the hook that lets training/evaluation rollouts see bursty (MMPP),
+    diurnal, or replayed traffic instead of a constant-rate stream:
+    pre-sample the trace and pass ``arrivals=trace_t`` per step (scan
+    over the trace array alongside the keys).
+
+    ``next_task`` similarly injects the next slot's per-device task/load
+    feature ((n,) in [0, 1], e.g. trace counts / (slot * peak_rps))
+    replacing the Bernoulli(task_prob) draw — how a2c.train teaches the
+    agent what bursty offered load looks like."""
     k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
-    acc_s, lat_s, en_s, t_total, e_infer = action_costs(
+    acc_s, lat_s, en_s, t_total, e_infer, stab_s = action_costs(
         cfg, tables, state, actions)
 
     alive = (state["battery_j"] > 0).astype(jnp.float32)
-    active = alive * state["task"]
-    r = rw.reward(cfg.weights, acc_s, lat_s, en_s, mask=active)
+    active = alive * jnp.sign(state["task"])
+    r = rw.reward(cfg.weights, acc_s, lat_s, en_s, stab_s, mask=active)
 
-    # energy drain: kinetics (always, while alive) + inference (if active)
+    # energy drain: kinetics (always, while alive) + inference scaled by
+    # the task/load level (identical to the paper's gate for {0,1} task)
     kin_p = en.kinetic_power(cfg.power, state["activity"][:, 0],
                              state["activity"][:, 1], state["activity"][:, 2])
     e_kin = kin_p * cfg.slot_seconds
-    drain = alive * (e_kin + active * e_infer * cfg.frames_per_slot)
+    drain = alive * (e_kin + state["task"] * e_infer * cfg.frames_per_slot)
     battery = jnp.maximum(state["battery_j"] - drain, 0.0)
 
     # dynamics: bandwidth random walk, queue M/M/1-ish, task Bernoulli
@@ -223,12 +267,16 @@ def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng):
                   * jnp.exp(jax.random.normal(k1, state["bandwidth"].shape)
                             * 0.15),
                   lpar.bw_min_bps, lpar.bw_max_bps)
-    arrivals = jax.random.poisson(k2, cfg.queue_arrival_rate).astype(
-        jnp.float32)
+    if arrivals is None:
+        arrivals = jax.random.poisson(k2, cfg.queue_arrival_rate)
+    arrivals = jnp.asarray(arrivals).astype(jnp.float32)
     queue = jnp.maximum(state["queue"] + arrivals
                         - cfg.queue_service_per_slot, 0.0)
-    task = jax.random.bernoulli(k3, cfg.task_prob,
-                                state["task"].shape).astype(jnp.float32)
+    if next_task is None:
+        task = jax.random.bernoulli(k3, cfg.task_prob,
+                                    state["task"].shape).astype(jnp.float32)
+    else:
+        task = jnp.clip(jnp.asarray(next_task, jnp.float32), 0.0, 1.0)
     ptx = jnp.clip(state["p_tx"]
                    + jax.random.normal(k4, state["p_tx"].shape) * 0.05,
                    cfg.power.p_tx_min, cfg.power.p_tx_max)
@@ -241,6 +289,6 @@ def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng):
                      task=task, p_tx=ptx, activity=act, t=state["t"] + 1)
     done = jnp.all(battery <= 0.0)
     info = {"t_total": t_total, "e_infer": e_infer, "acc_s": acc_s,
-            "lat_s": lat_s, "en_s": en_s, "alive": alive, "done": done,
-            "battery": battery}
+            "lat_s": lat_s, "en_s": en_s, "stab_s": stab_s, "alive": alive,
+            "done": done, "battery": battery}
     return new_state, r, info

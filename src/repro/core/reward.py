@@ -1,12 +1,24 @@
-"""Reward function (paper Eqs. 8-11).
+"""Reward function (paper Eqs. 8-11) + beyond-paper stability score.
 
 R = mean_k( w1*A + w2*L + w3*E ), sum(w) = 1.
 A: sigmoid-normalized accuracy; L/E: 1 - cost / all-local cost.
+
+The paper's L/E scores normalize by the *chosen version's* own all-local
+cost, so they cannot rank absolute service times across versions (heavy
+run locally scores exactly like light run locally), and nothing in the
+slot scores encodes request-level capacity. Under trace-driven
+per-request traffic (repro.sim) that blind spot is fatal: a device whose
+per-request service time exceeds the inter-arrival gap builds unbounded
+backlog. ``stability_score`` closes the loop: given utilization
+u = offered_rps x service_s it saturates to 1 when the device+link can
+absorb the offered load and to 0 when it cannot. ``w_stab = 0`` (the
+default) keeps the paper's exact reward.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 
@@ -15,15 +27,19 @@ class RewardWeights:
     w_acc: float = 1 / 3
     w_lat: float = 1 / 3
     w_energy: float = 1 / 3
+    w_stab: float = 0.0     # beyond-paper: SLO/stability-aware shaping
     # Eq. 9 sigmoid shape
     p: float = 20.0
     q: float = 0.72
+    # stability sigmoid sharpness (score = sigmoid(p_stab * (1 - u)))
+    p_stab: float = 8.0
 
     def normalized(self) -> "RewardWeights":
-        s = self.w_acc + self.w_lat + self.w_energy
+        s = self.w_acc + self.w_lat + self.w_energy + self.w_stab
         return dataclasses.replace(self, w_acc=self.w_acc / s,
                                    w_lat=self.w_lat / s,
-                                   w_energy=self.w_energy / s)
+                                   w_energy=self.w_energy / s,
+                                   w_stab=self.w_stab / s)
 
 
 def accuracy_score(w: RewardWeights, acc):
@@ -41,9 +57,19 @@ def energy_score(e_total, e_all_local):
     return 1.0 - e_total / jnp.maximum(e_all_local, 1e-9)
 
 
-def reward(w: RewardWeights, acc_s, lat_s, energy_s, mask=None):
-    """Eq. 8: per-UAV weighted sum averaged over (active) UAVs."""
+def stability_score(w: RewardWeights, utilization):
+    """Beyond-paper: ~1 while the device+link absorbs the offered load
+    (u < 1), ~0 once requests queue faster than they drain (u > 1)."""
+    return jax.nn.sigmoid(w.p_stab * (1.0 - utilization))
+
+
+def reward(w: RewardWeights, acc_s, lat_s, energy_s, stab_s=None,
+           mask=None):
+    """Eq. 8: per-UAV weighted sum averaged over (active) UAVs; the
+    stability term only contributes when w_stab > 0."""
     r = w.w_acc * acc_s + w.w_lat * lat_s + w.w_energy * energy_s
+    if stab_s is not None:
+        r = r + w.w_stab * stab_s
     if mask is not None:
         denom = jnp.maximum(jnp.sum(mask), 1.0)
         return jnp.sum(r * mask) / denom

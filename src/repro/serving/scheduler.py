@@ -11,13 +11,18 @@ Single-program JAX realization:
   - prefill runs per admitted request (B=1) and its cache is scattered
     into the pool slot.
 
-Because model decode_step takes one shared scalar `pos`, the engine keeps
-per-slot streams aligned by decoding each slot group with its own pos via
-vmap-free masking: we instead track a per-slot offset and rewrite positions
-through the ring-cache property that slot validity is positional. For
-simplicity and exactness, slots decode in *cohorts* that share a position
-(cohort = requests admitted together); this keeps the jitted step identical
-to the production serve_step while still giving continuous admission.
+Because model decode_step takes one shared scalar `pos`, slots decode in
+*cohorts* that share a position (cohort = requests admitted together);
+this keeps the jitted step identical to the production serve_step while
+still giving continuous admission. Requests retire *individually*: a
+finished request is compacted out of its cohort (batch-axis gather on
+the cache tree), the freed slot re-admits queued work on the next loop
+turn, and a cohort whose ring cache is exhausted retires truncated
+instead of silently wrapping `pos`.
+
+Per-request accounting matches the repro.sim.metrics schema: submit ->
+first-token (TTFT) and submit -> done wall steps, summarized by
+``ServerStats.latency_summary``.
 """
 from __future__ import annotations
 
@@ -40,9 +45,15 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
+    truncated: bool = False       # ring cache ran out before EOS/max
+    submit_step: int = -1         # wall step at submit()
+    first_token_step: int = -1    # wall step of prefill (first token)
+    done_step: int = -1           # wall step at retirement
 
     @property
     def done(self) -> bool:
+        if self.truncated:
+            return True
         if self.eos_id is not None and self.out and self.out[-1] == self.eos_id:
             return True
         return len(self.out) >= self.max_new_tokens
@@ -54,6 +65,25 @@ class ServerStats:
     completed: int = 0
     decode_steps: int = 0
     prefills: int = 0
+    truncated: int = 0
+    wall_steps: int = 0           # scheduler loop turns
+    slot_reclaims: int = 0        # slots freed by individual retirement
+    ttft_steps: List[int] = dataclasses.field(default_factory=list)
+    e2e_steps: List[int] = dataclasses.field(default_factory=list)
+
+    def latency_summary(self, slo_steps: Optional[float] = None) -> Dict:
+        """Same schema as the fleet simulator's latency reports
+        (repro.sim.metrics.summarize_latencies), in wall-step units."""
+        from repro.sim.metrics import summarize_latencies
+
+        out = summarize_latencies(self.e2e_steps, slo=slo_steps,
+                                  duration=float(self.wall_steps) or None,
+                                  unit="steps")
+        ttft = summarize_latencies(self.ttft_steps, unit="steps")
+        out["ttft_p50"] = ttft["p50"]
+        out["ttft_p95"] = ttft["p95"]
+        out["ttft_mean"] = ttft["mean"]
+        return out
 
 
 class ContinuousBatchingServer:
@@ -67,6 +97,7 @@ class ContinuousBatchingServer:
         self.cache_len = cache_len
         self.queue: Deque[Request] = deque()
         self.stats = ServerStats()
+        self._cache_axes = M.cache_axes(cfg)
 
         def _prefill(params, batch):
             return M.prefill(cfg, params, batch, total_len=cache_len)
@@ -82,6 +113,11 @@ class ContinuousBatchingServer:
     # -- client API ---------------------------------------------------------
 
     def submit(self, req: Request):
+        if len(req.tokens) + 1 > self.cache_len:
+            raise ValueError(
+                f"prompt of {len(req.tokens)} tokens cannot fit a "
+                f"cache_len={self.cache_len} ring with one generated token")
+        req.submit_step = self.stats.wall_steps
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -89,6 +125,7 @@ class ContinuousBatchingServer:
         finished: List[Request] = []
         steps = 0
         while (self.queue or self._cohorts) and steps < max_steps:
+            self.stats.wall_steps += 1
             self._admit()
             finished.extend(self._step_all())
             steps += 1
@@ -112,7 +149,7 @@ class ContinuousBatchingServer:
     def _admit(self):
         free = self.max_batch - self._slots_in_use()
         admit: List[Request] = []
-        # cohort = same-length prompts admitted together (pad to max)
+        # cohort = requests admitted together (left-pad to max prompt len)
         while self.queue and len(admit) < free:
             admit.append(self.queue.popleft())
         if not admit:
@@ -126,26 +163,62 @@ class ContinuousBatchingServer:
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         for i, r in enumerate(admit):
             r.out.append(int(first[i]))
+            r.first_token_step = self.stats.wall_steps
         self._cohorts.append({"requests": admit, "cache": cache,
                               "tok": first, "pos": S})
         self.stats.admitted += len(admit)
         self.stats.prefills += 1
 
+    def _take_slots(self, cache, idx):
+        """Gather cohort cache slots along each leaf's batch axis (leaves
+        carry leading layer-stacking dims, so the axis is per-leaf)."""
+        sel = jnp.asarray(idx, jnp.int32)
+        return jax.tree.map(
+            lambda a, ax: jnp.take(a, sel, axis=ax.index("batch")),
+            cache, self._cache_axes)
+
+    def _retire(self, c, finished: List[Request]) -> bool:
+        """Retire finished requests individually, compacting the cohort
+        so their slots free up for re-admission. Returns True while the
+        cohort still has live requests."""
+        live = [i for i, r in enumerate(c["requests"]) if not r.done]
+        if len(live) == len(c["requests"]):
+            return True
+        for r in c["requests"]:
+            if r.done:
+                r.done_step = self.stats.wall_steps
+                self.stats.completed += 1
+                self.stats.truncated += int(r.truncated)
+                self.stats.ttft_steps.append(
+                    r.first_token_step - r.submit_step)
+                self.stats.e2e_steps.append(r.done_step - r.submit_step)
+                finished.append(r)
+        if not live:
+            return False
+        self.stats.slot_reclaims += len(c["requests"]) - len(live)
+        c["requests"] = [c["requests"][i] for i in live]
+        c["cache"] = self._take_slots(c["cache"], live)
+        c["tok"] = c["tok"][jnp.asarray(live, jnp.int32)]
+        return True
+
     def _step_all(self) -> List[Request]:
         finished: List[Request] = []
         keep = []
         for c in self._cohorts:
-            live = [r for r in c["requests"] if not r.done]
-            if not live:
-                finished.extend(c["requests"])
-                self.stats.completed += len(c["requests"])
+            if not self._retire(c, finished):
+                continue
+            if c["pos"] >= self.cache_len:
+                # ring cache exhausted: retire truncated rather than let
+                # decode positions wrap over live history
+                for r in c["requests"]:
+                    r.truncated = True
+                self._retire(c, finished)
                 continue
             logits, cache = self._decode(self.params, c["cache"], c["tok"],
                                          jnp.int32(c["pos"]))
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             for i, r in enumerate(c["requests"]):
-                if not r.done:
-                    r.out.append(int(nxt[i]))
+                r.out.append(int(nxt[i]))
             c.update(cache=cache, tok=nxt, pos=c["pos"] + 1)
             self.stats.decode_steps += 1
             keep.append(c)

@@ -1,0 +1,28 @@
+"""repro.sim: trace-driven fleet simulator closing the loop between the
+EdgeRL controller and the executable serving stack.
+
+- ``traces``   — pluggable per-device request arrival generators
+  (Poisson, MMPP bursty, diurnal sinusoid, replay-from-array).
+- ``metrics``  — per-request latency percentiles, SLO attainment,
+  goodput and energy (schema shared with ``serving.ServerStats``).
+- ``backends`` — request pricing: a fast analytical backend over the
+  env's latency/energy/ProfileTables machinery, and an execute backend
+  that cross-checks a sampled subset through ``SplitServingEngine``.
+- ``fleet``    — the discrete-event loop: each decision epoch the
+  controller picks (version, cut) per device from *measured* state.
+"""
+from repro.sim.traces import (DiurnalTrace, MMPPTrace, PoissonTrace,
+                              RandomRateTrace, ReplayTrace, Trace,
+                              get_trace)
+from repro.sim.metrics import (FleetMetrics, LATENCY_SCHEMA,
+                               summarize_latencies)
+from repro.sim.backends import AnalyticalBackend, ExecuteBackend
+from repro.sim.fleet import FleetConfig, SimResult, simulate
+
+__all__ = [
+    "Trace", "PoissonTrace", "MMPPTrace", "DiurnalTrace", "ReplayTrace",
+    "RandomRateTrace",
+    "get_trace", "FleetMetrics", "LATENCY_SCHEMA", "summarize_latencies",
+    "AnalyticalBackend", "ExecuteBackend", "FleetConfig", "SimResult",
+    "simulate",
+]

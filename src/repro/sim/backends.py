@@ -1,0 +1,208 @@
+"""Request-pricing backends behind one interface.
+
+``AnalyticalBackend`` prices every request through the existing
+latency/energy/ProfileTables machinery (numpy snapshots of the env
+tables — scales to millions of simulated requests on CPU).
+
+``ExecuteBackend`` extends it: a sampled subset of requests is routed
+through the real ``SplitServingEngine`` on a reduced config, so the
+simulated activation bytes can be cross-checked *exactly* against the
+measured ones, and the analytical latency model can be checked for
+consistency against wall-clock execution (calibrated on the first
+sample; ratios thereafter must stay within a stated tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.env import EnvConfig, ProfileTables
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestPricing:
+    """Per-device per-request cost constants for one decision epoch.
+
+    All arrays are (n_devices,). Within an epoch every request of a
+    device shares these constants (same state, same action); per-request
+    variability comes from the fleet loop's queueing recursion.
+    """
+    head_s: np.ndarray       # device compute time per request
+    tx_s: np.ndarray         # link time per request (incl. ship amortization)
+    tail_s: np.ndarray       # server compute time per request
+    energy_j: np.ndarray     # device energy per request (compute + radio)
+    act_bytes: np.ndarray    # wire activation bytes per request (no amort.)
+    offloaded: np.ndarray    # bool: does a tail run on the server
+
+
+class AnalyticalBackend:
+    """Prices (version, cut) actions from the dense env tables."""
+
+    def __init__(self, env_cfg: EnvConfig, tables: ProfileTables):
+        self.env_cfg = env_cfg
+        self.tables = tables
+        # numpy snapshots: indexing dense tables per epoch must not pay
+        # jnp dispatch on the hot path
+        self._head = np.asarray(tables.head_flops)
+        self._tail = np.asarray(tables.tail_flops)
+        self._bytes = np.asarray(tables.cut_bytes)
+        self._wbytes = np.asarray(tables.tail_weight_bytes)
+
+    def price(self, model_id: np.ndarray, actions: np.ndarray,
+              bandwidth: np.ndarray, p_tx: np.ndarray) -> RequestPricing:
+        cfg = self.env_cfg
+        m = np.asarray(model_id)
+        j, k = np.asarray(actions)[:, 0], np.asarray(actions)[:, 1]
+        head = self._head[m, j, k]
+        tail = self._tail[m, j, k]
+        act_bytes = self._bytes[m, j, k]
+        tx_bytes = act_bytes
+        if cfg.weight_ship_slots > 0:
+            # same amortization rule as env.action_costs
+            tx_bytes = tx_bytes + self._wbytes[m, j, k] \
+                / (cfg.weight_ship_slots * cfg.frames_per_slot)
+        lp, pw = cfg.latency, cfg.power
+        bw = np.maximum(np.asarray(bandwidth, dtype=np.float64), 1.0)
+        head_s = head / lp.device_flops
+        tx_s = tx_bytes * 8.0 / bw
+        tail_s = tail / lp.server_flops
+        energy = pw.p_compute * head_s \
+            + np.asarray(p_tx, dtype=np.float64) * tx_bytes * 8.0 / bw
+        return RequestPricing(head_s=head_s, tx_s=tx_s, tail_s=tail_s,
+                              energy_j=energy, act_bytes=act_bytes,
+                              offloaded=tail > 0.0)
+
+    # the analytical backend executes nothing; the fleet loop calls this
+    # hook unconditionally so both backends share one interface
+    def maybe_execute(self, model_idx: int, j: int, k: int) -> None:
+        return None
+
+    def cross_check(self) -> Optional[Dict]:
+        return None
+
+
+class ExecuteBackend(AnalyticalBackend):
+    """Analytical pricing + sampled execution through SplitServingEngine.
+
+    ``model_cfgs``/``profiles`` must be the (reduced) configs and the
+    ModelProfiles the env tables were built from, and ``seq_len`` the
+    profile sequence length — the executed batch is (1, seq_len) so the
+    measured cut activation is byte-identical to the table entry.
+    """
+
+    def __init__(self, env_cfg: EnvConfig, tables: ProfileTables,
+                 model_cfgs: Sequence, profiles: Sequence,
+                 params: Sequence, *, seq_len: int, sample: int = 16,
+                 latency_tolerance: float = 5.0):
+        from repro.serving import SplitServingEngine
+
+        super().__init__(env_cfg, tables)
+        self.model_cfgs = list(model_cfgs)
+        self.profiles = list(profiles)
+        self.seq_len = int(seq_len)
+        self.sample = int(sample)
+        self.latency_tolerance = float(latency_tolerance)
+        self.records: List[Dict] = []
+        self._calib_flops: Optional[float] = None
+        self._engines = [
+            SplitServingEngine(c, p, versions=tuple(v.version
+                                                    for v in prof.versions))
+            for c, p, prof in zip(self.model_cfgs, params, self.profiles)]
+        self._batches = [self._make_batch(c) for c in self.model_cfgs]
+
+    def _make_batch(self, cfg):
+        import jax.numpy as jnp
+
+        toks = (jnp.arange(self.seq_len, dtype=jnp.int32)[None] * 7) \
+            % cfg.vocab_size
+        batch = {"tokens": toks}
+        if cfg.cross_attn_every:
+            batch["media"] = jnp.zeros((1, cfg.n_media_tokens, cfg.d_model),
+                                       cfg.cdtype)
+        if cfg.enc_dec:
+            batch["enc_frames"] = jnp.zeros((1, cfg.encoder_seq, cfg.d_model),
+                                            cfg.cdtype)
+        return batch
+
+    def expected_act_bytes(self, model_idx: int, j: int, k: int,
+                           batch: int = 1) -> int:
+        """Wire bytes the engine must measure for this action: the table
+        entry scaled by batch, plus the f32 per-row scales the w8a8 link
+        format carries (engine.infer ships int8 codes + scales; the env
+        tables price codes only — the scale vector is the one term the
+        slot-level tables fold away)."""
+        from repro.quant import get_version
+
+        prof = self.profiles[model_idx]
+        v = prof.versions[min(j, len(prof.versions) - 1)]
+        base = int(self._bytes[model_idx, j, k]) * batch
+        if get_version(v.version).act_bits == 8:
+            base += batch * self.seq_len * 4
+        return base
+
+    def maybe_execute(self, model_idx: int, j: int, k: int) -> None:
+        """Route one request through the real split engine (up to
+        ``sample`` total) and record measured vs analytical cost.
+
+        Terminal cuts (profile layer == n_layers) are skipped: the env
+        prices them as device-complete inference shipping a class id,
+        while the executable engine always finishes logits server-side —
+        nothing crosses the link for the tables to agree with."""
+        if len(self.records) >= self.sample:
+            return
+        import jax
+
+        from repro.core.controller import resolve_selection
+
+        cfg = self.model_cfgs[model_idx]
+        prof = self.profiles[model_idx]
+        v = prof.versions[min(j, len(prof.versions) - 1)]
+        if v.cut_points[min(k, len(v.cut_points) - 1)] >= v.n_layers:
+            return
+        version, cut = resolve_selection(cfg, prof, int(j), int(k))
+        eng = self._engines[model_idx]
+        batch = self._batches[model_idx]
+        logits, _ = eng.infer(batch, cut, version)       # warm (compile)
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        logits, measured_bytes = eng.infer(batch, cut, version)
+        jax.block_until_ready(logits)
+        wall_s = time.perf_counter() - t0
+        flops = float(self._head[model_idx, j, k]
+                      + self._tail[model_idx, j, k])
+        if self._calib_flops is None:
+            # first sample calibrates this host's effective FLOP/s; later
+            # samples then test the analytical model's *relative* cost
+            # structure against real execution
+            self._calib_flops = flops / max(wall_s, 1e-9)
+        est_s = flops / self._calib_flops
+        self.records.append({
+            "model": cfg.name, "version": version, "cut": cut,
+            "j": int(j), "k": int(k),
+            "expected_bytes": self.expected_act_bytes(model_idx, j, k),
+            "measured_bytes": int(measured_bytes),
+            "wall_s": wall_s, "est_s": est_s,
+        })
+
+    def cross_check(self) -> Optional[Dict]:
+        if not self.records:
+            return None
+        mismatches = [r for r in self.records
+                      if r["expected_bytes"] != r["measured_bytes"]]
+        ratios = np.array([r["wall_s"] / max(r["est_s"], 1e-12)
+                           for r in self.records])
+        tol = self.latency_tolerance
+        return {
+            "samples": len(self.records),
+            "bytes_exact": not mismatches,
+            "bytes_mismatches": len(mismatches),
+            "latency_ratio_median": float(np.median(ratios)),
+            "latency_ratio_max": float(np.max(ratios)),
+            "latency_tolerance": tol,
+            "latency_within_tolerance": bool(
+                np.all((ratios >= 1.0 / tol) & (ratios <= tol))),
+            "records": self.records,
+        }

@@ -1,0 +1,244 @@
+"""Discrete-event trace-driven fleet simulator.
+
+Each decision epoch (one env slot):
+
+1. the trace delivers per-device request arrivals,
+2. the controller policy picks (version, cut) per device from the
+   *measured* state — observed arrival rate (EWMA), server queue depth,
+   battery, link bandwidth — via ``controller.measured_state``,
+3. the pricing backend turns each action into per-request cost
+   constants (head/link/tail times, energy, wire bytes),
+4. requests flow through a per-device FIFO: the device serializes
+   head-compute + transmit per request, so completion times follow the
+   Lindley recursion C_k = max(A_k, C_{k-1}) + s — vectorized with a
+   running max, so a million-request epoch is a few numpy ops,
+5. offloaded tails add the measured server wait (queue * job service
+   time, exactly the env's Eq. 4 term) and feed the server backlog that
+   the *next* epoch's controller observes.
+
+Per-request end-to-end latency, SLO attainment, goodput and energy
+accumulate in ``FleetMetrics``; device backlogs carry across epochs, so
+bursts (MMPP) really queue instead of averaging away.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import energy as en
+from repro.core.env import EnvConfig, ProfileTables
+from repro.sim.backends import AnalyticalBackend
+from repro.sim.metrics import FleetMetrics
+from repro.sim.traces import Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    slo_s: float = 1.0            # per-request deadline
+    ewma: float = 0.5             # observed arrival-rate smoothing
+    max_epochs: int = 100_000
+    load_norm_rps: Optional[float] = None   # None -> 2 x trace mean
+    # Cap on the queue depth the *controller observes* (jobs). Fleet
+    # congestion can push the true queue orders of magnitude past
+    # anything the slot-env training distribution contains; an
+    # unclipped value drives the policy nets far out of their trained
+    # input range. Pricing and metrics always use the true queue.
+    queue_obs_clip: float = 25.0
+    record_epochs: bool = True
+
+
+@dataclasses.dataclass
+class SimResult:
+    summary: Dict
+    metrics: FleetMetrics
+    selection_hist: np.ndarray            # (M, V, K) requests per action
+    epochs: int
+    served: int
+    duration_s: float
+    cross_check: Optional[Dict] = None
+    epoch_log: List[Dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def modal_selection(self):
+        h = self.selection_hist
+        out = {}
+        for mi in range(h.shape[0]):
+            if h[mi].sum() > 0:
+                j, k = np.unravel_index(np.argmax(h[mi]), h[mi].shape)
+                out[mi] = (int(j), int(k))
+        return out
+
+
+# jit cache keyed by identity: repeated simulate() calls with the same
+# (policy, cfg, tables) objects — warm-up + timed benchmark runs, or one
+# policy over several seeds — must reuse one compiled decision step
+# instead of re-tracing per call
+_POLICY_JIT_CACHE: Dict = {}
+
+
+def _jitted_policy(policy, cfg, tables):
+    import jax
+
+    key = (id(policy), id(cfg), id(tables))
+    if key not in _POLICY_JIT_CACHE:
+        while len(_POLICY_JIT_CACHE) >= 32:   # bound pinned closures
+            _POLICY_JIT_CACHE.pop(next(iter(_POLICY_JIT_CACHE)))
+        _POLICY_JIT_CACHE[key] = (
+            jax.jit(lambda state, k: policy(cfg, tables, state, k)),
+            policy, cfg, tables)   # pin refs so ids stay valid
+    return _POLICY_JIT_CACHE[key][0]
+
+
+def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy: Callable,
+             trace: Trace, *, n_requests: int = 100_000, seed: int = 0,
+             fleet: FleetConfig = FleetConfig(),
+             backend: Optional[AnalyticalBackend] = None,
+             model_ids: Optional[Sequence[int]] = None) -> SimResult:
+    """Run the fleet until ``n_requests`` have arrived (or max_epochs).
+
+    ``policy`` has the baseline/controller signature
+    ``(env_cfg, tables, state, rng) -> (n, 2) int32`` — baselines from
+    ``core.baselines`` and ``agent_policy(params)`` both fit.
+
+    The trace and the world dynamics draw from independent generators
+    spawned off one seed, and the draw order is policy-independent, so
+    two policies simulated with the same seed face the *identical*
+    request stream — and the whole run is bit-reproducible.
+    """
+    import jax
+
+    from repro.core.controller import measured_state
+
+    cfg = env_cfg
+    n = cfg.n_uavs
+    lp, pw = cfg.latency, cfg.power
+    backend = backend if backend is not None else AnalyticalBackend(cfg,
+                                                                    tables)
+    ss = np.random.SeedSequence(seed)
+    s_trace, s_world = ss.spawn(2)
+    t_rng = np.random.default_rng(s_trace)
+    w_rng = np.random.default_rng(s_world)
+    jkey = jax.random.key(seed)
+
+    if model_ids is None:
+        model_ids = np.arange(n, dtype=np.int32) % tables.n_models
+    model_ids = np.asarray(model_ids, dtype=np.int32)
+
+    # world state (mirrors env_reset means, drawn from the world rng)
+    battery = np.full(n, pw.battery_j)
+    bw = w_rng.uniform(lp.bw_min_bps, lp.bw_max_bps, n)
+    p_tx = w_rng.uniform(pw.p_tx_min, pw.p_tx_max, n)
+    activity = np.tile(np.asarray(cfg.activity, dtype=np.float64), (n, 1))
+    side_queue = 0.0          # env-style background jobs on the server
+    backlog_s = 0.0           # fleet-induced tail work awaiting service
+    free_at = np.zeros(n)     # absolute time each device drains its FIFO
+    obs_rate = np.full(n, trace.mean_rps)
+    # load normalization must match what the controller trained on:
+    # cfg.peak_rps when the stability-aware env is in play, else a
+    # 2x-mean heuristic for paper-faithful (Bernoulli-task) policies
+    norm_rps = fleet.load_norm_rps or (
+        cfg.peak_rps if cfg.peak_rps > 0 else max(2.0 * trace.mean_rps,
+                                                  1e-9))
+
+    pol = _jitted_policy(policy, cfg, tables)
+    stream = trace.stream(t_rng, n, cfg.slot_seconds)
+    metrics = FleetMetrics(slo_s=fleet.slo_s)
+    hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts))
+    epoch_log: List[Dict] = []
+    served = 0
+    epoch = 0
+    t_now = 0.0
+
+    while served < n_requests and epoch < fleet.max_epochs:
+        counts = np.asarray(next(stream), dtype=np.int64)
+        alive = battery > 0.0
+        if not alive.any():
+            break
+        queue_jobs = side_queue + backlog_s / lp.job_service_s
+        srv_wait = queue_jobs * lp.job_service_s
+
+        # 1) decide from measured state
+        state = measured_state(
+            cfg, tables, battery_j=battery, bandwidth=bw, p_tx=p_tx,
+            queue_jobs=min(queue_jobs, fleet.queue_obs_clip),
+            load=obs_rate / norm_rps,
+            model_id=model_ids, activity=activity, t=epoch)
+        jkey, k_pol = jax.random.split(jkey)
+        actions = np.asarray(pol(state, k_pol))
+
+        # 2) price this epoch's actions
+        pr = backend.price(model_ids, actions, bw, p_tx)
+
+        # 3) flow requests through device FIFOs (Lindley recursion)
+        tail_in_s = 0.0
+        dropped = 0
+        executed = False
+        for d in range(n):
+            c = int(counts[d])
+            if c == 0:
+                continue
+            # draw offsets unconditionally: the world-rng draw order must
+            # not depend on policy-driven state (battery death), or two
+            # policies under the same seed would unpair mid-run
+            offs = t_now + np.sort(w_rng.uniform(0.0, cfg.slot_seconds, c))
+            if not alive[d]:
+                metrics.drop(c)
+                dropped += c
+                continue
+            s = pr.head_s[d] + pr.tx_s[d]
+            idx = np.arange(c)
+            start = np.maximum.accumulate(np.maximum(offs, free_at[d])
+                                          - s * idx)
+            done = start + s * (idx + 1)       # head+tx completion times
+            free_at[d] = done[-1]
+            lat = done - offs + pr.tail_s[d]
+            if pr.offloaded[d]:
+                lat = lat + srv_wait
+                tail_in_s += c * pr.tail_s[d]
+            metrics.record(lat, np.full(c, pr.energy_j[d]), device=d)
+            hist[model_ids[d], actions[d, 0], actions[d, 1]] += c
+            if not executed:
+                backend.maybe_execute(int(model_ids[d]),
+                                      int(actions[d, 0]),
+                                      int(actions[d, 1]))
+                executed = True
+
+        # 4) world dynamics (mirrors env_step, on the world rng)
+        kin_p = np.asarray(en.kinetic_power(pw, activity[:, 0],
+                                            activity[:, 1], activity[:, 2]))
+        drain = np.where(alive, kin_p * cfg.slot_seconds
+                         + counts * pr.energy_j, 0.0)
+        battery = np.maximum(battery - drain, 0.0)
+        bw = np.clip(bw * np.exp(w_rng.normal(size=n) * 0.15),
+                     lp.bw_min_bps, lp.bw_max_bps)
+        p_tx = np.clip(p_tx + w_rng.normal(size=n) * 0.05,
+                       pw.p_tx_min, pw.p_tx_max)
+        activity = np.clip(activity + w_rng.normal(size=(n, 3))
+                           * cfg.activity_jitter, 0.0, 1.0)
+        activity /= np.maximum(activity.sum(-1, keepdims=True), 1.0)
+        side_queue = max(side_queue
+                         + float(w_rng.poisson(cfg.queue_arrival_rate))
+                         - cfg.queue_service_per_slot, 0.0)
+        backlog_s = max(backlog_s + tail_in_s - cfg.slot_seconds, 0.0)
+        obs_rate = (1.0 - fleet.ewma) * obs_rate \
+            + fleet.ewma * counts / cfg.slot_seconds
+
+        served += int(counts.sum())
+        t_now += cfg.slot_seconds
+        if fleet.record_epochs:
+            epoch_log.append({
+                "epoch": epoch, "arrivals": int(counts.sum()),
+                "queue_jobs": float(queue_jobs),
+                "backlog_s": float(backlog_s), "dropped": dropped,
+                "alive": int(alive.sum()),
+            })
+        epoch += 1
+
+    summary = metrics.summary(duration_s=t_now)
+    summary["epochs"] = epoch
+    summary["requests"] = served
+    return SimResult(summary=summary, metrics=metrics, selection_hist=hist,
+                     epochs=epoch, served=served, duration_s=t_now,
+                     cross_check=backend.cross_check(), epoch_log=epoch_log)

@@ -1,0 +1,108 @@
+"""Per-request fleet metrics: latency percentiles, SLO attainment,
+goodput and energy — not just slot-averaged scores.
+
+``summarize_latencies`` is the shared schema: the fleet simulator and
+the continuous-batching scheduler (``serving.ServerStats``) both report
+through it, so a latency table means the same thing whether the numbers
+came from the analytical pricer or from wall-clock decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# Keys every latency report carries (values are floats; "unit" is the
+# only string: "s" for the simulator, "steps" for the scheduler).
+LATENCY_SCHEMA = ("count", "mean", "p50", "p95", "p99", "max",
+                  "slo", "slo_attainment", "goodput")
+
+
+def summarize_latencies(latencies, *, slo: Optional[float] = None,
+                        duration: Optional[float] = None,
+                        unit: str = "s") -> Dict:
+    """Percentiles + SLO attainment + goodput for a latency array.
+
+    ``slo``: deadline in the same unit; attainment is the fraction of
+    requests at or under it. ``duration``: wall span of the measurement
+    window; goodput is SLO-met requests per unit duration (falls back
+    to all completed requests when no SLO is given).
+    """
+    lat = np.asarray(latencies, dtype=np.float64).ravel()
+    out = {k: 0.0 for k in LATENCY_SCHEMA}
+    out["unit"] = unit
+    out["count"] = float(lat.size)
+    out["slo"] = float(slo) if slo is not None else float("nan")
+    if lat.size == 0:
+        out["slo_attainment"] = float("nan")
+        return out
+    out["mean"] = float(np.mean(lat))
+    p50, p95, p99 = np.percentile(lat, [50.0, 95.0, 99.0])
+    out["p50"], out["p95"], out["p99"] = float(p50), float(p95), float(p99)
+    out["max"] = float(np.max(lat))
+    good = float(np.sum(lat <= slo)) if slo is not None else float(lat.size)
+    out["slo_attainment"] = good / lat.size if slo is not None \
+        else float("nan")
+    out["goodput"] = good / duration if duration else 0.0
+    return out
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    """Streaming accumulator for per-request outcomes.
+
+    Latency/energy arrays are appended per (device, epoch) batch and
+    concatenated once at summary time, so recording is O(1) per batch
+    and a multi-million-request run stays a handful of numpy arrays.
+    """
+    slo_s: float = 1.0
+    _lat: List[np.ndarray] = dataclasses.field(default_factory=list)
+    _energy: List[np.ndarray] = dataclasses.field(default_factory=list)
+    _device: List[np.ndarray] = dataclasses.field(default_factory=list)
+    dropped: int = 0
+
+    def record(self, latencies_s, energies_j=None, device=None):
+        lat = np.asarray(latencies_s, dtype=np.float64).ravel()
+        if lat.size == 0:
+            return
+        self._lat.append(lat)
+        if energies_j is not None:
+            e = np.asarray(energies_j, dtype=np.float64).ravel()
+            self._energy.append(np.broadcast_to(e, lat.shape).copy()
+                                if e.size != lat.size else e)
+        if device is not None:
+            self._device.append(np.full(lat.shape, device, dtype=np.int32))
+
+    def drop(self, n: int):
+        """Requests lost outright (dead device): SLO misses, no latency."""
+        self.dropped += int(n)
+
+    @property
+    def latencies_s(self) -> np.ndarray:
+        return np.concatenate(self._lat) if self._lat else np.zeros(0)
+
+    @property
+    def energies_j(self) -> np.ndarray:
+        return np.concatenate(self._energy) if self._energy else np.zeros(0)
+
+    @property
+    def devices(self) -> np.ndarray:
+        return np.concatenate(self._device) if self._device \
+            else np.zeros(0, np.int32)
+
+    def summary(self, duration_s: Optional[float] = None) -> Dict:
+        lat = self.latencies_s
+        out = summarize_latencies(lat, slo=self.slo_s, duration=duration_s,
+                                  unit="s")
+        # dropped requests count against attainment and goodput
+        total = lat.size + self.dropped
+        if total:
+            met = out["slo_attainment"] * lat.size if lat.size else 0.0
+            out["slo_attainment"] = met / total
+        out["dropped"] = float(self.dropped)
+        e = self.energies_j
+        out["energy_j"] = float(np.sum(e))
+        out["energy_per_request_j"] = float(np.mean(e)) if e.size else 0.0
+        out["duration_s"] = float(duration_s) if duration_s else 0.0
+        return out

@@ -65,3 +65,64 @@ def test_eos_early_stop(setup):
                        max_new_tokens=50, eos_id=first))
     done = srv.run()
     assert len(done[0].out) == 1   # stopped at eos immediately
+
+
+def test_individual_retirement_refills_slot(setup):
+    """A finished request must free its slot for new admission while its
+    cohort-mates keep decoding — and compaction must not corrupt their
+    token streams."""
+    cfg, params = setup
+    prompts = np.random.default_rng(4).integers(
+        0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    n_long = 10
+    eng = ServingEngine(cfg, params, ServeConfig(max_new_tokens=n_long,
+                                                 cache_len=64))
+    want = np.asarray(eng.generate({"tokens": jnp.asarray(prompts)}))
+
+    srv = ContinuousBatchingServer(cfg, params, max_batch=2, cache_len=64)
+    srv.submit(Request(rid=0, tokens=prompts[0], max_new_tokens=2))
+    srv.submit(Request(rid=1, tokens=prompts[1], max_new_tokens=n_long))
+    srv.submit(Request(rid=2, tokens=prompts[0], max_new_tokens=2))
+    done = sorted(srv.run(), key=lambda q: q.rid)
+    assert [len(q.out) for q in done] == [2, n_long, 2]
+    # the long request's tokens are unaffected by its mate retiring
+    np.testing.assert_array_equal(done[1].out, want[1])
+    # rid=2 was admitted into rid=0's reclaimed slot before rid=1 ended
+    assert srv.stats.slot_reclaims >= 1
+    assert srv.stats.prefills == 2
+    assert done[2].first_token_step < done[1].done_step
+
+
+def test_per_request_latency_stats_schema(setup):
+    cfg, params = setup
+    srv = ContinuousBatchingServer(cfg, params, max_batch=2, cache_len=64)
+    for i in range(4):
+        srv.submit(Request(rid=i, tokens=np.arange(3, dtype=np.int32),
+                           max_new_tokens=3))
+    done = srv.run()
+    assert len(srv.stats.ttft_steps) == len(done) == 4
+    assert len(srv.stats.e2e_steps) == 4
+    assert all(t >= 1 for t in srv.stats.ttft_steps)
+    assert all(e >= t for e, t in zip(srv.stats.e2e_steps,
+                                      srv.stats.ttft_steps))
+    summ = srv.stats.latency_summary(slo_steps=100.0)
+    from repro.sim.metrics import LATENCY_SCHEMA
+    for k in LATENCY_SCHEMA:
+        assert k in summ, k
+    assert summ["unit"] == "steps"
+    assert summ["slo_attainment"] == 1.0
+
+
+def test_ring_cache_overflow_truncates_instead_of_wrapping(setup):
+    cfg, params = setup
+    srv = ContinuousBatchingServer(cfg, params, max_batch=1, cache_len=16)
+    srv.submit(Request(rid=0, tokens=np.arange(8, dtype=np.int32),
+                       max_new_tokens=100))
+    done = srv.run()
+    assert done[0].truncated and done[0].done
+    # prefill emits 1 token at pos 8; decode may run until pos hits 16
+    assert len(done[0].out) == 1 + (16 - 8)
+    assert srv.stats.truncated == 1
+    # a prompt that cannot fit at all is rejected up front
+    with pytest.raises(ValueError):
+        srv.submit(Request(rid=1, tokens=np.arange(16, dtype=np.int32)))

@@ -1,0 +1,224 @@
+"""repro.sim: trace generators, fleet-loop reproducibility, backend
+parity against the executable engine, and the controller-beats-statics
+acceptance run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (A2CConfig, RewardWeights, agent_policy,
+                        make_paper_env, make_tpu_env, make_train_episode,
+                        init_agent, train_agent, transformer_profile,
+                        env_reset, env_step)
+from repro.core.baselines import POLICIES
+from repro.core.latency import LatencyParams
+from repro.models import init
+from repro.optim import adamw_init
+from repro.sim import (AnalyticalBackend, ExecuteBackend, FleetConfig,
+                       LATENCY_SCHEMA, MMPPTrace, PoissonTrace, ReplayTrace,
+                       simulate, summarize_latencies)
+from repro.sim.traces import TRACES, RandomRateTrace
+
+
+# --------------------------------------------------------------------------
+# traces
+# --------------------------------------------------------------------------
+
+def test_traces_deterministic_and_nonnegative():
+    for name, cls in TRACES.items():
+        trace = ReplayTrace(counts=np.arange(5)) if name == "replay" \
+            else cls()
+        a = trace.stream(np.random.default_rng(0), 3, 10.0)
+        b = trace.stream(np.random.default_rng(0), 3, 10.0)
+        rows_a = np.stack([next(a) for _ in range(20)])
+        rows_b = np.stack([next(b) for _ in range(20)])
+        np.testing.assert_array_equal(rows_a, rows_b)
+        assert rows_a.shape == (20, 3) and (rows_a >= 0).all(), name
+        assert trace.mean_rps > 0
+
+
+def test_replay_trace_cycles_and_broadcasts():
+    trace = ReplayTrace(counts=np.asarray([1, 2, 3]))
+    gen = trace.stream(np.random.default_rng(0), 4, 30.0)
+    rows = [next(gen) for _ in range(5)]
+    np.testing.assert_array_equal(rows[0], np.full(4, 1))
+    np.testing.assert_array_equal(rows[3], np.full(4, 1))   # cycled
+    assert trace.mean_rps == pytest.approx(2.0 / 30.0)
+
+
+def test_mmpp_is_actually_bursty():
+    trace = MMPPTrace(rate_low_rps=1.0, rate_high_rps=50.0)
+    gen = trace.stream(np.random.default_rng(1), 1, 10.0)
+    counts = np.array([next(gen)[0] for _ in range(300)])
+    assert counts.max() > 300      # burst epochs
+    assert np.percentile(counts, 20) < 30   # calm epochs
+
+
+# --------------------------------------------------------------------------
+# env trace injection + deterministic rollouts
+# --------------------------------------------------------------------------
+
+def test_env_step_arrival_and_task_injection():
+    cfg, tables = make_paper_env()
+    state = env_reset(cfg, tables, jax.random.key(0))
+    actions = jnp.zeros((cfg.n_uavs, 2), jnp.int32)
+    s1, _, _ = env_step(cfg, tables, state, actions, jax.random.key(1),
+                        arrivals=7.0)
+    # queue = max(0 + 7 - service_per_slot, 0), no Poisson draw involved
+    assert float(s1["queue"]) == pytest.approx(
+        max(7.0 - cfg.queue_service_per_slot, 0.0))
+    load = jnp.full((cfg.n_uavs,), 0.37)
+    s2, _, _ = env_step(cfg, tables, state, actions, jax.random.key(1),
+                        next_task=load)
+    np.testing.assert_allclose(np.asarray(s2["task"]), 0.37, rtol=1e-6)
+
+
+def test_env_rollout_bit_reproducible_with_task_seq():
+    cfg, tables = make_paper_env(peak_rps=20.0)
+    ac = A2CConfig(episodes=2)
+    params = init_agent(cfg, tables, ac, jax.random.key(0))
+    opt = adamw_init(params)
+    step = make_train_episode(cfg, tables, ac)
+    seq = jnp.asarray(np.random.default_rng(3).uniform(
+        0, 1, (cfg.episode_len, cfg.n_uavs)), jnp.float32)
+    _, _, s1 = step(params, opt, jax.random.key(7), seq)
+    _, _, s2 = step(params, opt, jax.random.key(7), seq)
+    assert float(s1["loss"]) == float(s2["loss"])
+
+
+def test_fleet_simulate_bit_reproducible():
+    cfg, tables = make_paper_env(slot_seconds=10.0)
+    trace = PoissonTrace(rate_rps=8.0)
+    kw = dict(n_requests=3000, seed=11, fleet=FleetConfig(slo_s=1.0))
+    r1 = simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)
+    r2 = simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)
+    np.testing.assert_array_equal(r1.metrics.latencies_s,
+                                  r2.metrics.latencies_s)
+    np.testing.assert_array_equal(r1.metrics.energies_j,
+                                  r2.metrics.energies_j)
+    assert r1.summary == r2.summary
+    np.testing.assert_array_equal(r1.selection_hist, r2.selection_hist)
+
+
+def test_fleet_request_stream_is_policy_independent():
+    """Same seed => identical arrivals regardless of policy, so policy
+    comparisons are paired."""
+    cfg, tables = make_paper_env(slot_seconds=10.0)
+    trace = PoissonTrace(rate_rps=8.0)
+    kw = dict(n_requests=2000, seed=5, fleet=FleetConfig(slo_s=1.0))
+    r1 = simulate(cfg, tables, POLICIES["device_only"], trace, **kw)
+    r2 = simulate(cfg, tables, POLICIES["full_offload"], trace, **kw)
+    assert [e["arrivals"] for e in r1.epoch_log] == \
+        [e["arrivals"] for e in r2.epoch_log]
+
+
+# --------------------------------------------------------------------------
+# metrics schema (shared with serving.ServerStats)
+# --------------------------------------------------------------------------
+
+def test_latency_schema_shared_with_scheduler_stats():
+    from repro.serving.scheduler import ServerStats
+
+    stats = ServerStats(wall_steps=10, ttft_steps=[1, 2], e2e_steps=[3, 8])
+    sched = stats.latency_summary(slo_steps=5.0)
+    sim = summarize_latencies([0.1, 0.2, 0.9], slo=0.5, duration=10.0)
+    for k in LATENCY_SCHEMA:
+        assert k in sched and k in sim, k
+    assert sched["unit"] == "steps" and sim["unit"] == "s"
+    assert sched["slo_attainment"] == pytest.approx(0.5)
+    assert sim["slo_attainment"] == pytest.approx(2 / 3)
+    # empty-safe
+    empty = summarize_latencies([], slo=1.0)
+    assert empty["count"] == 0 and np.isnan(empty["slo_attainment"])
+
+
+def test_fleet_metrics_account_drops():
+    from repro.sim.metrics import FleetMetrics
+
+    m = FleetMetrics(slo_s=1.0)
+    m.record([0.5, 0.6], [0.1, 0.1], device=0)
+    m.drop(2)
+    s = m.summary(duration_s=10.0)
+    assert s["count"] == 2 and s["dropped"] == 2
+    assert s["slo_attainment"] == pytest.approx(0.5)   # 2 met of 4 offered
+
+
+# --------------------------------------------------------------------------
+# backend parity: analytical tables vs executed SplitServingEngine
+# --------------------------------------------------------------------------
+
+def test_execute_backend_act_bytes_parity():
+    """The analytical backend's cut-activation bytes must match the
+    engine's measured act_bytes exactly for every (version, cut) that
+    ships an activation (terminal cuts are env-only semantics)."""
+    arch, S = "qwen2-0.5b", 8
+    env_cfg, tables = make_tpu_env([arch], reduced=True, seq_len=S)
+    cfg = get_config(arch).reduced()
+    prof = transformer_profile(cfg, seq_len=S)
+    params = init(cfg, jax.random.key(0))
+    be = ExecuteBackend(env_cfg, tables, [cfg], [prof], [params],
+                        seq_len=S, sample=64)
+    for j in range(tables.n_versions):
+        for k in range(tables.n_cuts):
+            be.maybe_execute(0, j, k)
+    cc = be.cross_check()
+    assert cc["samples"] > 0
+    assert cc["bytes_exact"], cc["records"]
+    assert cc["bytes_mismatches"] == 0
+    assert np.isfinite(cc["latency_ratio_median"])
+
+
+def test_analytical_backend_matches_action_costs():
+    """Backend pricing must reproduce env.action_costs' t_total for
+    offloaded actions (same tables, same formulas)."""
+    from repro.core.env import action_costs
+
+    cfg, tables = make_paper_env()
+    state = env_reset(cfg, tables, jax.random.key(0))
+    be = AnalyticalBackend(cfg, tables)
+    actions = np.tile(np.asarray([[1, 1]], np.int32), (cfg.n_uavs, 1))
+    pr = be.price(np.asarray(state["model_id"]), actions,
+                  np.asarray(state["bandwidth"]), np.asarray(state["p_tx"]))
+    costs = action_costs(cfg, tables, state, jnp.asarray(actions))
+    t_total = np.asarray(costs[3])
+    queue_wait = float(state["queue"]) * cfg.latency.job_service_s
+    np.testing.assert_allclose(pr.head_s + pr.tx_s + pr.tail_s + queue_wait,
+                               t_total, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(costs[4]), pr.energy_j, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# acceptance: trained controller vs static baselines under bursty load
+# --------------------------------------------------------------------------
+
+def test_a2c_beats_static_baselines_on_mmpp():
+    """The trained (stability-aware, domain-randomized) A2C controller
+    must beat all-local and always-max-offload on SLO attainment under
+    the bursty MMPP trace, averaged over paired request streams."""
+    n, burst = 4, 30.0
+    lat = LatencyParams(server_flops=0.55e12 * n, bw_max_bps=1e9)
+    w = RewardWeights(w_acc=0.05, w_lat=0.1, w_energy=0.15, w_stab=0.7)
+    cfg, tables = make_paper_env(n_uavs=n, latency=lat, weights=w,
+                                 peak_rps=burst, slot_seconds=10.0,
+                                 frames_per_slot=10.0 * burst)
+    mids = np.zeros(n, np.int32)   # homogeneous vgg fleet
+    params, _ = train_agent(cfg, tables,
+                            A2CConfig(episodes=500, entropy_coef=0.03),
+                            seed=0, trace=RandomRateTrace(max_rps=burst))
+    trace = MMPPTrace(rate_low_rps=2.0, rate_high_rps=burst)
+
+    def mean_slo(policy):
+        vals = []
+        for seed in (0, 2, 4):
+            res = simulate(cfg, tables, policy, trace, n_requests=20_000,
+                           seed=seed, fleet=FleetConfig(slo_s=2.0),
+                           model_ids=mids)
+            vals.append(res.summary["slo_attainment"])
+        return float(np.mean(vals))
+
+    a2c = mean_slo(agent_policy(params))
+    local = mean_slo(POLICIES["device_only"])
+    offload = mean_slo(POLICIES["full_offload"])
+    assert a2c > local, (a2c, local)
+    assert a2c > offload, (a2c, offload)
