@@ -21,6 +21,8 @@ System benches:
   roofline_suite        — dominant roofline terms from results/dryrun.jsonl
   serving_decode        — us/token through the serving engine (reduced model)
   split_inference       — EdgeRL split execution vs monolithic forward
+  train_throughput      — A2C episodes/s, batched (vmap) vs looped
+  pricing_numpy_throughput — numpy pricing-core actions/s (fleet hot path)
   kernels_interpret     — Pallas flash-attention kernel (interpret mode)
 """
 from __future__ import annotations
@@ -363,6 +365,70 @@ def scheduler_throughput():
         f"p95_e2e_steps={summ['p95']:.0f}")
 
 
+def train_throughput(loop_episodes=16, batch_envs=16):
+    """Episodes/s of the A2C update path: looped single-env episodes vs
+    one vmapped batch_envs update (same nets, same env). The batched
+    path amortizes the per-episode scan/dispatch overhead AND the
+    per-update host work (A2C.train extracts the stats history every
+    update — the loop body here replicates train() exactly) across E
+    parallel worlds inside one jit. Best-of-reps per path to shed
+    scheduler noise on small hosts."""
+    from repro.core import A2CConfig, init_agent, make_paper_env, \
+        make_train_episode
+    from repro.optim import adamw_init
+    cfg, tables = make_paper_env()
+
+    def eps_per_s(E, calls, reps=3):
+        ac = A2CConfig(batch_envs=E)
+        params = init_agent(cfg, tables, ac, jax.random.key(0))
+        opt = adamw_init(params)
+        step = make_train_episode(cfg, tables, ac)
+        p, o, s = step(params, opt, jax.random.key(1))   # compile
+        jax.block_until_ready(s["loss"])
+        best = float("inf")
+        for rep in range(reps):
+            t0 = time.perf_counter()
+            for i in range(calls):
+                p, o, s = step(p, o, jax.random.key(2 + i))
+                history = {k: float(v) for k, v in s.items()}  # as train()
+            best = min(best, (time.perf_counter() - t0) / calls)
+        assert history
+        return E / best, best
+
+    looped, us_loop = eps_per_s(1, loop_episodes)
+    batched, us_batch = eps_per_s(batch_envs, 4)
+    row("train_throughput", us_batch * 1e6,
+        f"batched_eps_per_s={batched:.2f} looped_eps_per_s={looped:.2f} "
+        f"speedup={batched/looped:.2f}x batch_envs={batch_envs} "
+        f"looped_us_per_ep={us_loop*1e6:.0f}")
+
+
+def pricing_numpy_throughput(n_devices=4096, iters=200):
+    """Actions/s through the numpy pricing path (the fleet simulator's
+    per-epoch hot loop: one price_actions call per decision epoch)."""
+    from repro.core import make_paper_env
+    from repro.sim import AnalyticalBackend
+    cfg, tables = make_paper_env()
+    be = AnalyticalBackend(cfg, tables)
+    r = np.random.default_rng(0)
+    mids = r.integers(0, tables.n_models, n_devices).astype(np.int32)
+    acts = np.stack([r.integers(0, tables.n_versions, n_devices),
+                     r.integers(0, tables.n_cuts, n_devices)],
+                    axis=-1).astype(np.int32)
+    lp, pw = cfg.latency, cfg.power
+    bw = r.uniform(lp.bw_min_bps, lp.bw_max_bps, n_devices)
+    ptx = r.uniform(pw.p_tx_min, pw.p_tx_max, n_devices)
+    be.price(mids, acts, bw, ptx)                        # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pr = be.price(mids, acts, bw, ptx)
+    dt = time.perf_counter() - t0
+    assert isinstance(pr.t_total, np.ndarray)
+    row("pricing_numpy_throughput", dt / iters * 1e6,
+        f"per_call,devices={n_devices} "
+        f"actions_per_s={n_devices*iters/dt:.0f}")
+
+
 def fleet_sim(n_requests=100_000):
     """repro.sim throughput: analytical-backend requests/s + epochs/s."""
     from repro.core import make_paper_env
@@ -432,7 +498,8 @@ ALL = [table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
        a2c_convergence, ablation_a2c, ablation_agents, roofline_suite,
        hillclimb_variants,
        serving_decode, split_inference, continuous_batching,
-       scheduler_throughput, fleet_sim,
+       scheduler_throughput, fleet_sim, train_throughput,
+       pricing_numpy_throughput,
        kernels_interpret, quant_matmul]
 
 

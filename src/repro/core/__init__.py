@@ -1,11 +1,16 @@
 """EdgeRL core: the paper's contribution as a composable JAX module.
 
-Profiles (CNN analytic + transformer), energy/latency cost models
-(Eqs. 1-5), the EdgeEnv MDP (Eq. 6-7), reward (Eqs. 8-11), the A2C agent
-(Sec. II-C) and the centralized controller (Sec. II-D).
+Profiles (CNN analytic + transformer), the single backend-polymorphic
+cost core (pricing: Eqs. 1-5 and 9-11 under jnp *and* numpy), the
+EdgeEnv MDP (Eq. 6-7), reward aggregation (Eq. 8), the A2C agent
+(Sec. II-C, batched over vmapped parallel envs) and the centralized
+controller (Sec. II-D).
 """
 from repro.core.env import (OBS_FEATURES, EnvConfig, ProfileTables,
-                            build_tables, env_reset, env_step, observe)
+                            action_breakdown, build_tables, env_reset,
+                            env_step, observe)
+from repro.core.pricing import (PricingBreakdown, StateView, numpy_tables,
+                                price_actions, view_from_state)
 from repro.core.reward import RewardWeights
 from repro.core.a2c import A2CConfig, train, init_agent, make_train_episode
 from repro.core.profiles import paper_profiles, transformer_profile
@@ -17,7 +22,9 @@ from repro.core.roofline_env import make_dryrun_tpu_env
 
 __all__ = [
     "OBS_FEATURES", "EnvConfig", "ProfileTables", "build_tables",
-    "env_reset", "env_step", "observe", "RewardWeights", "A2CConfig",
+    "env_reset", "env_step", "observe", "action_breakdown",
+    "PricingBreakdown", "StateView", "price_actions", "view_from_state",
+    "numpy_tables", "RewardWeights", "A2CConfig",
     "train", "init_agent", "make_train_episode", "paper_profiles",
     "transformer_profile", "make_paper_env", "make_tpu_env",
     "measured_state", "resolve_selection", "train_agent",

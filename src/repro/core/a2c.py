@@ -3,26 +3,32 @@
 Networks follow the paper: the critic has two fully connected layers of
 512 and 256 features; the actor adapts the Multi-Discrete action structure
 with an extra *shared* 128-wide layer per UAV device feeding the (version,
-cut-point) logit pairs.
+cut-point) logit pairs. Networks and rollout machinery are shared with
+the PPO ablation (``repro.core.actor_critic``).
 
 Training is episodic ("at the end of each episode, both networks' weights
 undergo updates with a batch of experienced transitions"): one jitted
-``train_episode`` rolls the env for ``episode_len`` slots with lax.scan,
-then applies a batched A2C update (n-step discounted returns, advantage
-baseline, entropy bonus) with AdamW.
+``train_episode`` rolls ``batch_envs`` parallel env instances for
+``episode_len`` slots with vmap-over-scan — per-env reset keys and
+per-env domain-randomized task traces — then applies one mean-gradient
+A2C update (n-step discounted returns, per-env advantage baseline,
+entropy bonus) with AdamW. ``batch_envs=1`` is the paper's exact
+single-episode update; larger values trade nothing but memory for
+episodes/s and scenario diversity per update.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.env import (EnvConfig, ProfileTables, env_reset, env_step,
-                            observe)
-from repro.models import params as pp
-from repro.models.params import P
+from repro.core import actor_critic as net
+from repro.core.actor_critic import (actor_apply, critic_apply,  # noqa: F401
+                                     greedy_actions, init_agent,
+                                     logp_entropy, plan_agent,
+                                     sample_actions)
+from repro.core.env import EnvConfig, ProfileTables
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -32,88 +38,11 @@ class A2CConfig:
     lr: float = 7e-4
     entropy_coef: float = 0.01
     value_coef: float = 0.5
-    episodes: int = 300
+    episodes: int = 300         # update steps; each uses batch_envs episodes
+    batch_envs: int = 1         # parallel env instances per update (vmap)
     hidden1: int = 512      # paper
     hidden2: int = 256      # paper
     uav_head: int = 128     # paper: shared per-UAV layer
-
-
-def plan_agent(cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig):
-    n = cfg.n_uavs
-    obs = n * cfg.obs_dim_per_uav
-    V, K = tables.n_versions, tables.n_cuts
-    h1, h2, hu = ac.hidden1, ac.hidden2, ac.uav_head
-    dense = lambda i, o: {"w": P((i, o), (None, None)),
-                          "b": P((o,), (None,), "zeros")}
-    per_uav = lambda i, o: {"w": P((n, i, o), (None, None, None)),
-                            "b": P((n, o), (None, None), "zeros")}
-    return {
-        "actor": {"l1": dense(obs, h1), "l2": dense(h1, h2),
-                  "uav": per_uav(h2, hu),
-                  "ver": per_uav(hu, V), "cut": per_uav(hu, K)},
-        "critic": {"l1": dense(obs, h1), "l2": dense(h1, h2),
-                   "out": dense(h2, 1)},
-    }
-
-
-def init_agent(cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig, rng):
-    return pp.materialize(plan_agent(cfg, tables, ac), rng,
-                          jnp.dtype("float32"))
-
-
-def _dense(p, x):
-    return x @ p["w"] + p["b"]
-
-
-def actor_apply(params, obs_flat):
-    """obs_flat: (obs_total,) -> logits_v (n, V), logits_c (n, K)."""
-    a = params["actor"]
-    h = jax.nn.relu(_dense(a["l1"], obs_flat))
-    h = jax.nn.relu(_dense(a["l2"], h))
-    hu = jax.nn.relu(jnp.einsum("i,nio->no", h, a["uav"]["w"])
-                     + a["uav"]["b"])                       # (n, hu)
-    lv = jnp.einsum("no,nov->nv", hu, a["ver"]["w"]) + a["ver"]["b"]
-    lc = jnp.einsum("no,nok->nk", hu, a["cut"]["w"]) + a["cut"]["b"]
-    return lv, lc
-
-
-def critic_apply(params, obs_flat):
-    c = params["critic"]
-    h = jax.nn.relu(_dense(c["l1"], obs_flat))
-    h = jax.nn.relu(_dense(c["l2"], h))
-    return _dense(c["out"], h)[0]
-
-
-def _mask_logits(logits, valid):
-    return jnp.where(valid > 0, logits, -1e9)
-
-
-def sample_actions(params, obs_flat, valid_v, rng):
-    lv, lc = actor_apply(params, obs_flat)
-    lv = _mask_logits(lv, valid_v)
-    k1, k2 = jax.random.split(rng)
-    av = jax.random.categorical(k1, lv, axis=-1)
-    ac_ = jax.random.categorical(k2, lc, axis=-1)
-    return jnp.stack([av, ac_], axis=-1).astype(jnp.int32)
-
-
-def greedy_actions(params, obs_flat, valid_v):
-    lv, lc = actor_apply(params, obs_flat)
-    lv = _mask_logits(lv, valid_v)
-    return jnp.stack([jnp.argmax(lv, -1), jnp.argmax(lc, -1)],
-                     axis=-1).astype(jnp.int32)
-
-
-def _logp_entropy(params, obs_flat, actions, valid_v):
-    lv, lc = actor_apply(params, obs_flat)
-    lv = _mask_logits(lv, valid_v)
-    logp_v = jax.nn.log_softmax(lv, -1)
-    logp_c = jax.nn.log_softmax(lc, -1)
-    lp = (jnp.take_along_axis(logp_v, actions[:, :1], -1)[:, 0]
-          + jnp.take_along_axis(logp_c, actions[:, 1:2], -1)[:, 0])
-    ent = (-jnp.sum(jnp.exp(logp_v) * logp_v, -1)
-           - jnp.sum(jnp.exp(logp_c) * logp_c, -1))
-    return jnp.sum(lp), jnp.sum(ent)
 
 
 def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
@@ -121,80 +50,58 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
     """Returns jitted (params, opt_state, rng[, task_seq]) ->
     (params, opt_state, stats).
 
-    ``task_seq``, when given, is an (episode_len, n) array of per-slot
-    offered load in [0, 1] that replaces the env's Bernoulli task draw
-    (env_step's next_task hook) — used to train the agent against
-    trace-driven traffic (repro.sim.traces)."""
+    ``task_seq``, when given, is an (episode_len, n) array — or
+    (batch_envs, episode_len, n) for per-env domain-randomized traces —
+    of per-slot offered load in [0, 1] that replaces the env's Bernoulli
+    task draw (env_step's next_task hook), used to train the agent
+    against trace-driven traffic (repro.sim.traces)."""
     opt = AdamWConfig(lr=ac.lr, weight_decay=0.0, warmup_steps=0,
                       total_steps=ac.episodes, grad_clip=1.0,
                       min_lr_ratio=1.0)
     n = env_cfg.n_uavs
-    valid_rows = None  # computed per model assignment below
-
-    def valid_v(state):
-        return tables.version_valid[state["model_id"]]   # (n, V)
-
-    def rollout(params, state0, rng, task_seq=None):
-        def step(carry, xs):
-            state = carry
-            k, nxt = xs
-            obs = observe(env_cfg, tables, state).reshape(-1)
-            actions = sample_actions(params, obs, valid_v(state), k)
-            k_env = jax.random.fold_in(k, 1)
-            state2, r, info = env_step(env_cfg, tables, state, actions,
-                                       k_env, next_task=nxt)
-            out = {"obs": obs, "actions": actions, "reward": r,
-                   "valid": valid_v(state), "alive": info["alive"],
-                   "battery": info["battery"]}
-            return state2, out
-        keys = jax.random.split(rng, env_cfg.episode_len)
-        state_T, traj = jax.lax.scan(step, state0, (keys, task_seq))
-        return state_T, traj
-
-    def returns_from(traj, bootstrap, gamma):
-        def back(carry, r):
-            g = r + gamma * carry
-            return g, g
-        _, rets = jax.lax.scan(back, bootstrap, traj["reward"], reverse=True)
-        return rets
+    E = max(int(ac.batch_envs), 1)
+    rollout = net.make_rollout(env_cfg, tables)
 
     def loss_fn(params, traj, rets):
+        """Mean A2C loss over the (E, T) batch -> mean gradient across E
+        worlds. The networks are evaluated over one flat (E*T,) sample
+        batch (plain GEMMs thread better than E-batched ones on CPU);
+        the advantage baseline is then normalized per env over its own
+        episode, matching the paper's per-episode update."""
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), traj)
+
         def per_step(obs, actions, valid):
-            lp, ent = _logp_entropy(params, obs, actions, valid)
-            v = critic_apply(params, obs)
-            return lp, ent, v
+            lp, ent = logp_entropy(params, obs, actions, valid)
+            return lp, ent, critic_apply(params, obs)
         lp, ent, values = jax.vmap(per_step)(
-            traj["obs"], traj["actions"], traj["valid"])
+            flat["obs"], flat["actions"], flat["valid"])
+        lp = lp.reshape(rets.shape)
+        values = values.reshape(rets.shape)
         adv = rets - values
-        adv_n = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-6)
+        adv_n = ((adv - jnp.mean(adv, axis=1, keepdims=True))
+                 / (jnp.std(adv, axis=1, keepdims=True) + 1e-6))
         actor_loss = -jnp.mean(lp * jax.lax.stop_gradient(adv_n))
         critic_loss = 0.5 * jnp.mean(jnp.square(adv))
-        ent_mean = jnp.mean(ent) / n
         loss = (actor_loss + ac.value_coef * critic_loss
                 - ac.entropy_coef * jnp.mean(ent))
         return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss,
-                      "entropy": ent_mean}
+                      "entropy": jnp.mean(ent) / n}
 
     @jax.jit
     def train_episode(params, opt_state, rng, task_seq=None):
-        k0, k1, k2 = jax.random.split(rng, 3)
-        state0 = env_reset(env_cfg, tables, k0, model_ids=model_ids)
-        if task_seq is not None:
-            # slot t's load is task_seq[t]: seed state0 with row 0 and
-            # let env_step's next_task install rows 1..T-1 (last repeats)
-            state0 = dict(state0, task=task_seq[0])
-            task_seq = jnp.concatenate([task_seq[1:], task_seq[-1:]])
-        state_T, traj = rollout(params, state0, k1, task_seq)
-        obs_T = observe(env_cfg, tables, state_T).reshape(-1)
-        bootstrap = critic_apply(params, obs_T)
-        rets = returns_from(traj, bootstrap, ac.gamma)
+        task_seq = net.prepare_task_seq(task_seq, E)
+        _, traj, bootstrap = net.run_batched_episodes(
+            env_cfg, tables, rollout, params, rng, E,
+            model_ids=model_ids, task_seq=task_seq)
+        rets = jax.vmap(net.discounted_returns, in_axes=(0, 0, None))(
+            traj["reward"], bootstrap, ac.gamma)
         (loss, stats), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, traj, rets)
         params, opt_state, om = adamw_update(opt, params, grads, opt_state)
         stats = dict(stats, loss=loss,
-                     episode_reward=jnp.sum(traj["reward"]),
+                     episode_reward=jnp.mean(jnp.sum(traj["reward"], -1)),
                      mean_reward=jnp.mean(traj["reward"]),
-                     final_battery=jnp.mean(traj["battery"][-1]),
+                     final_battery=jnp.mean(traj["battery"][:, -1]),
                      grad_norm=om["grad_norm"])
         return params, opt_state, stats
 
@@ -205,19 +112,28 @@ def train(env_cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig,
           rng, model_ids=None, log_every: int = 0, task_sampler=None):
     """``task_sampler(episode) -> (episode_len, n_uavs)`` array, when
     given, supplies each episode's offered-load sequence (trace-driven
-    training; see controller.train_agent's ``trace`` argument)."""
+    training; see controller.train_agent's ``trace`` argument). With
+    ``ac.batch_envs = E > 1`` each update consumes E sampled sequences
+    (episode indices ep*E .. ep*E+E-1) — per-env domain randomization."""
+    import numpy as np
+
     params = init_agent(env_cfg, tables, ac, rng)
     opt_state = adamw_init(params)
     step = make_train_episode(env_cfg, tables, ac, model_ids=model_ids)
+    E = max(int(ac.batch_envs), 1)
     history = []
     for ep in range(ac.episodes):
         rng, k = jax.random.split(rng)
         if task_sampler is None:
             params, opt_state, stats = step(params, opt_state, k)
         else:
-            params, opt_state, stats = step(
-                params, opt_state, k,
-                jnp.asarray(task_sampler(ep), jnp.float32))
+            seq = np.stack([np.asarray(task_sampler(ep * E + e),
+                                       dtype=np.float32)
+                            for e in range(E)])
+            if E == 1:
+                seq = seq[0]    # keep the unbatched jit signature stable
+            params, opt_state, stats = step(params, opt_state, k,
+                                            jnp.asarray(seq))
         history.append({k2: float(v) for k2, v in stats.items()})
         if log_every and (ep + 1) % log_every == 0:
             print(f"ep {ep+1:4d} reward={history[-1]['mean_reward']:+.4f} "

@@ -1,0 +1,222 @@
+"""Shared actor-critic networks + batched rollout machinery.
+
+Both on-policy agents (``a2c``, the paper's algorithm, and ``ppo``, the
+beyond-paper ablation) train the same networks over the same rollouts;
+this module holds that shared layer once:
+
+- the paper's networks (critic 512/256, actor with a shared 128-wide
+  per-UAV head feeding the (version, cut) logit pairs) and their
+  sampling / log-prob / entropy math;
+- ``make_rollout``: one lax.scan episode of the env, optionally
+  recording the behavior policy's logp/value (PPO's surrogate needs
+  them, A2C recomputes);
+- ``run_batched_episodes``: vmap over ``batch_envs`` parallel env
+  instances *inside* one jit — per-env reset keys, per-env
+  domain-randomized task traces, one mean-gradient update downstream.
+  Training E envs per update costs far less than E sequential episodes
+  (the per-step nets are tiny; batching amortizes scan and dispatch),
+  and the gradient sees E independent worlds per step;
+- ``discounted_returns`` / ``gae``: the two return estimators.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.env import env_reset, env_step, observe
+from repro.models import params as pp
+from repro.models.params import P
+
+
+# --------------------------------------------------------------------------
+# networks (paper Sec. II-C)
+# --------------------------------------------------------------------------
+
+def plan_agent(cfg, tables, ac):
+    """Parameter plan; ``ac`` supplies hidden1/hidden2/uav_head widths."""
+    n = cfg.n_uavs
+    obs = n * cfg.obs_dim_per_uav
+    V, K = tables.n_versions, tables.n_cuts
+    h1, h2, hu = ac.hidden1, ac.hidden2, ac.uav_head
+    dense = lambda i, o: {"w": P((i, o), (None, None)),
+                          "b": P((o,), (None,), "zeros")}
+    per_uav = lambda i, o: {"w": P((n, i, o), (None, None, None)),
+                            "b": P((n, o), (None, None), "zeros")}
+    return {
+        "actor": {"l1": dense(obs, h1), "l2": dense(h1, h2),
+                  "uav": per_uav(h2, hu),
+                  "ver": per_uav(hu, V), "cut": per_uav(hu, K)},
+        "critic": {"l1": dense(obs, h1), "l2": dense(h1, h2),
+                   "out": dense(h2, 1)},
+    }
+
+
+def init_agent(cfg, tables, ac, rng):
+    return pp.materialize(plan_agent(cfg, tables, ac), rng,
+                          jnp.dtype("float32"))
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def actor_apply(params, obs_flat):
+    """obs_flat: (obs_total,) -> logits_v (n, V), logits_c (n, K)."""
+    a = params["actor"]
+    h = jax.nn.relu(_dense(a["l1"], obs_flat))
+    h = jax.nn.relu(_dense(a["l2"], h))
+    hu = jax.nn.relu(jnp.einsum("i,nio->no", h, a["uav"]["w"])
+                     + a["uav"]["b"])                       # (n, hu)
+    lv = jnp.einsum("no,nov->nv", hu, a["ver"]["w"]) + a["ver"]["b"]
+    lc = jnp.einsum("no,nok->nk", hu, a["cut"]["w"]) + a["cut"]["b"]
+    return lv, lc
+
+
+def critic_apply(params, obs_flat):
+    c = params["critic"]
+    h = jax.nn.relu(_dense(c["l1"], obs_flat))
+    h = jax.nn.relu(_dense(c["l2"], h))
+    return _dense(c["out"], h)[0]
+
+
+def _mask_logits(logits, valid):
+    return jnp.where(valid > 0, logits, -1e9)
+
+
+def sample_actions(params, obs_flat, valid_v, rng):
+    lv, lc = actor_apply(params, obs_flat)
+    lv = _mask_logits(lv, valid_v)
+    k1, k2 = jax.random.split(rng)
+    av = jax.random.categorical(k1, lv, axis=-1)
+    ac_ = jax.random.categorical(k2, lc, axis=-1)
+    return jnp.stack([av, ac_], axis=-1).astype(jnp.int32)
+
+
+def greedy_actions(params, obs_flat, valid_v):
+    lv, lc = actor_apply(params, obs_flat)
+    lv = _mask_logits(lv, valid_v)
+    return jnp.stack([jnp.argmax(lv, -1), jnp.argmax(lc, -1)],
+                     axis=-1).astype(jnp.int32)
+
+
+def logp_entropy(params, obs_flat, actions, valid_v):
+    lv, lc = actor_apply(params, obs_flat)
+    lv = _mask_logits(lv, valid_v)
+    logp_v = jax.nn.log_softmax(lv, -1)
+    logp_c = jax.nn.log_softmax(lc, -1)
+    lp = (jnp.take_along_axis(logp_v, actions[:, :1], -1)[:, 0]
+          + jnp.take_along_axis(logp_c, actions[:, 1:2], -1)[:, 0])
+    ent = (-jnp.sum(jnp.exp(logp_v) * logp_v, -1)
+           - jnp.sum(jnp.exp(logp_c) * logp_c, -1))
+    return jnp.sum(lp), jnp.sum(ent)
+
+
+def valid_versions(tables, state):
+    return tables.version_valid[state["model_id"]]   # (n, V)
+
+
+# --------------------------------------------------------------------------
+# rollouts
+# --------------------------------------------------------------------------
+
+def make_rollout(env_cfg, tables, *, record_policy=False):
+    """Returns ``rollout(params, state0, rng, task_seq=None) ->
+    (state_T, traj)``: one episode scanned over ``episode_len`` slots.
+    ``traj`` leaves have a leading time axis; with ``record_policy`` the
+    behavior policy's per-step logp and value are recorded too (PPO's
+    clipped surrogate needs them fixed at sampling time).
+
+    ``task_seq``, when given, is an (episode_len, n) array of per-slot
+    offered load in [0, 1] fed through env_step's ``next_task`` hook
+    (trace-driven training; see controller.train_agent)."""
+
+    def rollout(params, state0, rng, task_seq=None):
+        def step(state, xs):
+            k, nxt = xs
+            obs = observe(env_cfg, tables, state).reshape(-1)
+            valid = valid_versions(tables, state)
+            actions = sample_actions(params, obs, valid, k)
+            out = {"obs": obs, "actions": actions, "valid": valid}
+            if record_policy:
+                lp, _ = logp_entropy(params, obs, actions, valid)
+                out["logp"] = lp
+                out["value"] = critic_apply(params, obs)
+            k_env = jax.random.fold_in(k, 1)
+            state2, r, info = env_step(env_cfg, tables, state, actions,
+                                       k_env, next_task=nxt)
+            out.update(reward=r, alive=info["alive"],
+                       battery=info["battery"])
+            return state2, out
+
+        keys = jax.random.split(rng, env_cfg.episode_len)
+        return jax.lax.scan(step, state0, (keys, task_seq))
+
+    return rollout
+
+
+def run_batched_episodes(env_cfg, tables, rollout, params, rng,
+                         batch_envs, model_ids=None, task_seq=None):
+    """Reset and roll ``batch_envs`` independent env instances under one
+    jit (vmapped over per-env reset/rollout keys and per-env task
+    traces). Returns ``(state_T, traj, bootstrap)`` with a leading env
+    axis on every leaf; ``bootstrap`` is the critic's value at the final
+    state of each env (for return bootstrapping)."""
+    k0, k1 = jax.random.split(rng)
+    state0 = jax.vmap(
+        lambda k: env_reset(env_cfg, tables, k, model_ids=model_ids)
+    )(jax.random.split(k0, batch_envs))
+    if task_seq is not None:
+        # slot t's load is task_seq[:, t]: seed state0 with row 0 and
+        # let env_step's next_task install rows 1..T-1 (last repeats)
+        state0 = dict(state0, task=task_seq[:, 0])
+        task_seq = jnp.concatenate([task_seq[:, 1:], task_seq[:, -1:]],
+                                   axis=1)
+        state_T, traj = jax.vmap(
+            lambda s0, k, ts: rollout(params, s0, k, ts)
+        )(state0, jax.random.split(k1, batch_envs), task_seq)
+    else:
+        state_T, traj = jax.vmap(
+            lambda s0, k: rollout(params, s0, k)
+        )(state0, jax.random.split(k1, batch_envs))
+    obs_T = jax.vmap(
+        lambda s: observe(env_cfg, tables, s).reshape(-1))(state_T)
+    bootstrap = jax.vmap(lambda o: critic_apply(params, o))(obs_T)
+    return state_T, traj, bootstrap
+
+
+def prepare_task_seq(task_seq, batch_envs):
+    """Normalize a task sequence to the batched (E, T, n) layout: a 2-D
+    (T, n) sequence (the unbatched API) is shared across all envs."""
+    if task_seq is None:
+        return None
+    task_seq = jnp.asarray(task_seq, jnp.float32)
+    if task_seq.ndim == 2:
+        task_seq = jnp.broadcast_to(
+            task_seq[None], (batch_envs,) + task_seq.shape)
+    return task_seq
+
+
+# --------------------------------------------------------------------------
+# return estimators
+# --------------------------------------------------------------------------
+
+def discounted_returns(rewards, bootstrap, gamma):
+    """n-step discounted returns along the leading time axis."""
+    def back(carry, r):
+        g = r + gamma * carry
+        return g, g
+    _, rets = jax.lax.scan(back, bootstrap, rewards, reverse=True)
+    return rets
+
+
+def gae(rewards, values, bootstrap, gamma, lam):
+    """Generalized advantage estimation; returns (advantages, returns)."""
+    def back(carry, xs):
+        adv_next, v_next = carry
+        r, v = xs
+        delta = r + gamma * v_next - v
+        adv = delta + gamma * lam * adv_next
+        return (adv, v), adv
+    (_, _), advs = jax.lax.scan(back, (jnp.float32(0.0), bootstrap),
+                                (rewards, values), reverse=True)
+    return advs, advs + values

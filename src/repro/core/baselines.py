@@ -4,14 +4,18 @@ against: device-only, full-offload, random, and a per-step greedy oracle.
 The greedy oracle enumerates every (version, cut) pair per UAV under the
 *current* state and picks the per-UAV reward argmax — since Eq. 8 averages
 a per-UAV score, per-UAV argmax is the per-step optimum (the RL agent can
-only beat it through multi-step battery/queue effects).
+only beat it through multi-step battery/queue effects). It scores the
+full (V, K) grid through the single pricing core (``core.pricing``), so
+it ranks actions under exactly the physics the env rewards and the fleet
+simulator meters.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.env import EnvConfig, ProfileTables, action_costs
+from repro.core import pricing
+from repro.core.env import EnvConfig, ProfileTables
 
 
 def device_only(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
@@ -29,10 +33,14 @@ def full_offload(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
 
 
 def random_policy(cfg: EnvConfig, tables: ProfileTables, state, rng):
+    """Uniform over each device's *valid* versions and all cuts. Sampling
+    randint(0, n_versions) % nv would bias toward low version indices
+    whenever a model has fewer versions than the padded table width;
+    randint takes a per-device maxval, so sample [0, nv) directly."""
     n = cfg.n_uavs
     k1, k2 = jax.random.split(rng)
     nv = tables.version_valid[state["model_id"]].sum(-1).astype(jnp.int32)
-    j = jax.random.randint(k1, (n,), 0, tables.n_versions) % nv
+    j = jax.random.randint(k1, (n,), 0, nv)
     k = jax.random.randint(k2, (n,), 0, tables.n_cuts)
     return jnp.stack([j, k], -1).astype(jnp.int32)
 
@@ -42,17 +50,17 @@ def greedy_oracle(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
     n = cfg.n_uavs
     V, K = tables.n_versions, tables.n_cuts
     w = cfg.weights
+    view = pricing.view_from_state(state)
 
     jj, kk = jnp.meshgrid(jnp.arange(V), jnp.arange(K), indexing="ij")
     pairs = jnp.stack([jj.ravel(), kk.ravel()], -1).astype(jnp.int32)  # (VK,2)
 
     def score(pair):
         actions = jnp.tile(pair[None], (n, 1))
-        acc_s, lat_s, en_s, _, _, stab_s = action_costs(
-            cfg, tables, state, actions)
+        br = pricing.price_actions(cfg, tables, view, actions)
         valid = tables.version_valid[state["model_id"], pair[0]]
-        s = (w.w_acc * acc_s + w.w_lat * lat_s + w.w_energy * en_s
-             + w.w_stab * stab_s)
+        s = (w.w_acc * br.acc_score + w.w_lat * br.lat_score
+             + w.w_energy * br.energy_score + w.w_stab * br.stab_score)
         return jnp.where(valid > 0, s, -jnp.inf)
 
     scores = jax.vmap(score)(pairs)          # (VK, n)

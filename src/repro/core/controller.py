@@ -101,7 +101,11 @@ def resolve_selection(model_cfg, profile, j: int, k: int):
 def train_agent(cfg: EnvConfig, tables: ProfileTables,
                 ac: A2C.A2CConfig = A2C.A2CConfig(), seed: int = 0,
                 log_every: int = 0, trace=None):
-    """Train the A2C controller; ``trace`` (a repro.sim.traces.Trace)
+    """Train the A2C controller. ``ac.batch_envs = E`` rolls E vmapped
+    env instances per update inside one jit (each with its own reset
+    draw and, under a trace, its own sampled load sequence) — the same
+    wall-clock per update buys E× the episodes and scenario diversity.
+    ``trace`` (a repro.sim.traces.Trace)
     switches the episode's task feature from the Bernoulli draw to
     trace-driven offered load — counts / (slot * peak_rps), the same
     normalization the fleet simulator feeds ``measured_state`` — so the
@@ -173,41 +177,56 @@ def agent_policy(params):
 def evaluate_policy(cfg: EnvConfig, tables: ProfileTables,
                     policy: Callable, rng, episodes: int = 5) -> Dict:
     """Roll a policy; aggregate the paper's reported metrics + the
-    (version, cut) selection histogram (Table II reproduction)."""
-    n = cfg.n_uavs
-    V, K = tables.n_versions, tables.n_cuts
-    hist = np.zeros((tables.n_models, V, K))
-    agg = {k: 0.0 for k in ("reward", "latency", "energy", "acc_score",
-                            "lat_score", "en_score", "alive_slots")}
-    steps = 0
+    (version, cut) selection histogram (Table II reproduction).
+
+    Each episode is one jitted lax.scan over the slots — no host
+    round-trip per slot — with the selection histogram built by a
+    scatter-add over the (model, version, cut) indices. The per-episode
+    rng threading (split per episode, split per slot, policy/env
+    fold-ins) matches the historical per-slot Python loop, so fixed-seed
+    results are unchanged up to float summation order."""
+    M, V, K = tables.n_models, tables.n_versions, tables.n_cuts
 
     @jax.jit
-    def one_step(state, k):
-        actions = policy(cfg, tables, state, jax.random.fold_in(k, 7))
-        state2, r, info = env_step(cfg, tables, state, actions,
-                                   jax.random.fold_in(k, 13))
-        return state2, (actions, r, info)
-
-    for ep in range(episodes):
+    def one_episode(rng):
         rng, k0 = jax.random.split(rng)
-        state = env_reset(cfg, tables, k0)
-        for t in range(cfg.episode_len):
+        state0 = env_reset(cfg, tables, k0)
+
+        def step(carry, _):
+            state, rng = carry
             rng, k = jax.random.split(rng)
-            state, (actions, r, info) = one_step(state, k)
-            a_np = np.asarray(actions)
-            m_np = np.asarray(state["model_id"])
-            alive = np.asarray(info["alive"])
-            for u in range(n):
-                if alive[u]:
-                    hist[m_np[u], a_np[u, 0], a_np[u, 1]] += 1
-            agg["reward"] += float(r)
-            agg["latency"] += float(jnp.mean(info["t_total"]))
-            agg["energy"] += float(jnp.mean(info["e_infer"]))
-            agg["acc_score"] += float(jnp.mean(info["acc_s"]))
-            agg["lat_score"] += float(jnp.mean(info["lat_s"]))
-            agg["en_score"] += float(jnp.mean(info["en_s"]))
-            agg["alive_slots"] += float(jnp.sum(info["alive"]))
-            steps += 1
+            actions = policy(cfg, tables, state, jax.random.fold_in(k, 7))
+            state2, r, info = env_step(cfg, tables, state, actions,
+                                       jax.random.fold_in(k, 13))
+            out = {
+                "actions": actions, "model_id": state["model_id"],
+                "alive": info["alive"], "reward": r,
+                "latency": jnp.mean(info["t_total"]),
+                "energy": jnp.mean(info["e_infer"]),
+                "acc_score": jnp.mean(info["acc_s"]),
+                "lat_score": jnp.mean(info["lat_s"]),
+                "en_score": jnp.mean(info["en_s"]),
+                "alive_slots": jnp.sum(info["alive"]),
+            }
+            return (state2, rng), out
+
+        (_, rng), tr = jax.lax.scan(step, (state0, rng), None,
+                                    length=cfg.episode_len)
+        m = tr.pop("model_id").reshape(-1)
+        a = tr.pop("actions").reshape(-1, 2)
+        alive = tr.pop("alive").reshape(-1)
+        hist = jnp.zeros((M, V, K)).at[m, a[:, 0], a[:, 1]].add(alive)
+        return rng, hist, {k: jnp.sum(v) for k, v in tr.items()}
+
+    hist = np.zeros((M, V, K))
+    agg = {k: 0.0 for k in ("reward", "latency", "energy", "acc_score",
+                            "lat_score", "en_score", "alive_slots")}
+    for ep in range(episodes):
+        rng, ep_hist, sums = one_episode(rng)
+        hist += np.asarray(ep_hist)
+        for k in agg:
+            agg[k] += float(sums[k])
+    steps = episodes * cfg.episode_len
     out = {k: v / steps for k, v in agg.items()}
     out["selection_hist"] = hist
     # modal (version, cut index) per model — Table II analogue

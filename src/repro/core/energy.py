@@ -1,4 +1,9 @@
-"""Device energy model (paper Eqs. 1-3) + UAV kinetic power model [12].
+"""Device power parameters (paper Eqs. 1-3) + UAV kinetic power model [12].
+
+The per-request compute/transmit energy formulas live in
+``repro.core.pricing`` (the single cost core) and are re-exported here;
+``kinetic_power`` stays local because it is a per-slot airframe term,
+not part of request pricing.
 
 Kinetic coefficients follow Stolaroff et al., "Energy use and life cycle
 greenhouse gas emissions of drones for commercial package delivery"
@@ -11,6 +16,11 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+
+from repro.core.pricing import compute_energy, transmit_energy
+
+__all__ = ["DevicePower", "kinetic_power", "compute_energy",
+           "transmit_energy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,13 +49,3 @@ def kinetic_power(p: DevicePower, fwd, vert, rot):
     hover = jnp.clip(1.0 - fwd - vert - rot, 0.0, 1.0)
     return (fwd * p.p_forward + vert * p.p_vertical + rot * p.p_rotate
             + hover * p.p_hover)
-
-
-def compute_energy(p: DevicePower, t_local_s):
-    """Eq. 1: E_comp = P_comp * T_local."""
-    return p.p_compute * t_local_s
-
-
-def transmit_energy(p_tx_w, bandwidth_bps, n_bytes):
-    """Eq. 2: E_trans = beta_k(B) * D, with beta = P_tx / throughput."""
-    return p_tx_w * (n_bytes * 8.0) / jnp.maximum(bandwidth_bps, 1.0)

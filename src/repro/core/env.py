@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import energy as en
 from repro.core import latency as lat
+from repro.core import pricing
 from repro.core import reward as rw
 from repro.core.profiles import ModelProfile
 
@@ -178,55 +179,27 @@ def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
     """Per-UAV (acc_score, lat_score, energy_score, t_total, e_infer,
     stab_score) for actions (n, 2) = (version j, cut index l).
 
-    stab_score is the beyond-paper stability term (reward.py): it reads
+    stab_score is the beyond-paper stability term (pricing.py): it reads
     the task feature as offered load in [0, 1] of cfg.peak_rps and
     scores whether this action's per-request device+link service time
     can absorb it. It only enters the reward when RewardWeights.w_stab
     > 0; with cfg.peak_rps == 0 the utilization is 0 and the score is a
     constant sigmoid(p_stab) ~ 1 for every action — rankings and
-    advantages are unchanged, but set peak_rps when weighting it."""
-    m = state["model_id"]
-    j, k = actions[:, 0], actions[:, 1]
-    head = tables.head_flops[m, j, k]
-    tail = tables.tail_flops[m, j, k]
-    nbytes = tables.cut_bytes[m, j, k]
-    if cfg.weight_ship_slots > 0:
-        # Amortized per-frame share of staging this version's tail weights
-        # server-side: shipped once per decision epoch (weight_ship_slots
-        # slots), spread over every frame served in that epoch. nbytes is
-        # a per-frame quantity (env_step scales by frames_per_slot), so
-        # the divisor must include frames_per_slot too.
-        nbytes = nbytes + (tables.tail_weight_bytes[m, j, k]
-                           / (cfg.weight_ship_slots * cfg.frames_per_slot))
-    acc = tables.acc[m, j]
-    full = tables.full_flops[m, j]
+    advantages are unchanged, but set peak_rps when weighting it.
 
-    lp, pw, w = cfg.latency, cfg.power, cfg.weights
-    # Eq. 5, with the server-side term (queue wait + tail compute) gated
-    # on a tail actually running there: a terminal cut executes entirely
-    # on-device and never visits the server queue. Charging T_queue to
-    # local execution (and normalizing by the small local baseline)
-    # would make congestion punish local *harder* than offload, driving
-    # every policy to offload into an already-saturated server.
-    t_remote = jnp.where(tail > 0.0,
-                         lat.remote_time(lp, tail, state["queue"]), 0.0)
-    t_total = (lat.local_time(lp, head)
-               + lat.transmit_time(state["bandwidth"], nbytes) + t_remote)
-    t_full_local = lat.local_time(lp, full)
-    e_comp = en.compute_energy(pw, lat.local_time(lp, head))
-    e_trans = en.transmit_energy(state["p_tx"], state["bandwidth"], nbytes)
-    e_infer = e_comp + e_trans
-    e_full_local = en.compute_energy(pw, t_full_local)
+    Thin wrapper over the single cost core: all Eq. 1-5/9-11 math lives
+    in ``pricing.price_actions`` (shared with the fleet simulator's
+    numpy backend); ``action_breakdown`` exposes the full breakdown."""
+    br = action_breakdown(cfg, tables, state, actions)
+    return (br.acc_score, br.lat_score, br.energy_score, br.t_total,
+            br.energy_j, br.stab_score)
 
-    acc_s = rw.accuracy_score(w, acc)
-    lat_s = rw.latency_score(t_total, t_full_local)
-    en_s = rw.energy_score(e_infer, e_full_local)
-    # per-request service time the device serializes: head compute + link
-    service_s = lat.local_time(lp, head) + lat.transmit_time(
-        state["bandwidth"], nbytes)
-    util = state["task"] * cfg.peak_rps * service_s
-    stab_s = rw.stability_score(w, util)
-    return acc_s, lat_s, en_s, t_total, e_infer, stab_s
+
+def action_breakdown(cfg: EnvConfig, tables: ProfileTables, state,
+                     actions) -> pricing.PricingBreakdown:
+    """Full per-UAV PricingBreakdown for actions (n, 2) under ``state``."""
+    return pricing.price_actions(cfg, tables,
+                                 pricing.view_from_state(state), actions)
 
 
 def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng,

@@ -1,13 +1,19 @@
-"""End-to-end latency model (paper Eqs. 4-5).
+"""Latency parameters for the end-to-end model (paper Eqs. 4-5).
 
-T = T_local(head) + T_trans(cut activation) + T_queue + T_remote(tail).
-Throughputs are effective (not peak) FLOP/s for the TX2 / PowerEdge regime.
+The formulas themselves live in ``repro.core.pricing`` — the single
+backend-polymorphic cost core — and are re-exported here for API
+compatibility. Throughputs are effective (not peak) FLOP/s for the
+TX2 / PowerEdge regime.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
+from repro.core.pricing import (local_time, remote_time, total_time,
+                                transmit_time)
+
+__all__ = ["LatencyParams", "local_time", "transmit_time", "remote_time",
+           "total_time"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,24 +23,3 @@ class LatencyParams:
     job_service_s: float = 0.05       # mean service time of a queued job
     bw_min_bps: float = 16e6          # 2 MB/s
     bw_max_bps: float = 320e6         # 40 MB/s
-
-
-def local_time(lp: LatencyParams, head_flops):
-    return head_flops / lp.device_flops
-
-
-def transmit_time(bandwidth_bps, n_bytes):
-    return (n_bytes * 8.0) / jnp.maximum(bandwidth_bps, 1.0)
-
-
-def remote_time(lp: LatencyParams, tail_flops, queue_len):
-    """Eq. 4: T_remote = T_queue + T_comp(tail)."""
-    return queue_len * lp.job_service_s + tail_flops / lp.server_flops
-
-
-def total_time(lp: LatencyParams, head_flops, tail_flops, n_bytes,
-               bandwidth_bps, queue_len):
-    """Eq. 5."""
-    return (local_time(lp, head_flops)
-            + transmit_time(bandwidth_bps, n_bytes)
-            + remote_time(lp, tail_flops, queue_len))

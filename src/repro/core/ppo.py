@@ -1,10 +1,12 @@
 """PPO agent (beyond-paper ablation).
 
 The paper chooses A2C "for its efficiency and effectiveness"; PPO is the
-natural modern baseline to test that choice. Reuses the A2C networks and
-rollout machinery; adds clipped-surrogate updates with GAE over multiple
-epochs per episode batch. Compared against A2C in
-``benchmarks.run --only ablation_agents``.
+natural modern baseline to test that choice. Built on the same shared
+networks and batched rollout machinery as A2C
+(``repro.core.actor_critic`` — the rollout records the behavior policy's
+logp/value for the clipped surrogate); adds GAE and multiple surrogate
+epochs per episode batch. ``batch_envs`` parallel envs per update, same
+as A2C. Compared against A2C in ``benchmarks.run --only ablation_agents``.
 """
 from __future__ import annotations
 
@@ -13,9 +15,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.a2c import (A2CConfig, _logp_entropy, actor_apply,
-                            critic_apply, init_agent, sample_actions)
-from repro.core.env import EnvConfig, ProfileTables, env_reset, env_step, observe
+from repro.core import actor_critic as net
+from repro.core.a2c import A2CConfig
+from repro.core.actor_critic import critic_apply, init_agent, logp_entropy
+from repro.core.env import EnvConfig, ProfileTables
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -28,7 +31,8 @@ class PPOConfig:
     lr: float = 3e-4
     entropy_coef: float = 0.01
     value_coef: float = 0.5
-    episodes: int = 300
+    episodes: int = 300         # update steps; each uses batch_envs episodes
+    batch_envs: int = 1         # parallel env instances per update (vmap)
     base: A2CConfig = dataclasses.field(default_factory=A2CConfig)
 
 
@@ -37,40 +41,15 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
     opt = AdamWConfig(lr=pc.lr, weight_decay=0.0, warmup_steps=0,
                       total_steps=pc.episodes * pc.epochs, grad_clip=1.0,
                       min_lr_ratio=1.0)
-    n = env_cfg.n_uavs
-
-    def valid_v(state):
-        return tables.version_valid[state["model_id"]]
-
-    def rollout(params, state0, rng):
-        def step(state, k):
-            obs = observe(env_cfg, tables, state).reshape(-1)
-            valid = valid_v(state)
-            actions = sample_actions(params, obs, valid, k)
-            lp, _ = _logp_entropy(params, obs, actions, valid)
-            v = critic_apply(params, obs)
-            state2, r, info = env_step(env_cfg, tables, state, actions,
-                                       jax.random.fold_in(k, 1))
-            return state2, {"obs": obs, "actions": actions, "reward": r,
-                            "valid": valid, "logp": lp, "value": v}
-        keys = jax.random.split(rng, env_cfg.episode_len)
-        return jax.lax.scan(step, state0, keys)
-
-    def gae(traj, bootstrap):
-        def back(carry, xs):
-            adv_next, v_next = carry
-            r, v = xs
-            delta = r + pc.gamma * v_next - v
-            adv = delta + pc.gamma * pc.lam * adv_next
-            return (adv, v), adv
-        (_, _), advs = jax.lax.scan(back, (jnp.float32(0.0), bootstrap),
-                                    (traj["reward"], traj["value"]),
-                                    reverse=True)
-        return advs, advs + traj["value"]
+    E = max(int(pc.batch_envs), 1)
+    rollout = net.make_rollout(env_cfg, tables, record_policy=True)
 
     def loss_fn(params, traj, advs, rets):
+        """Clipped surrogate over the flattened (E*T,) transition batch;
+        advantages normalized across the whole batch (for E=1 this is
+        the per-episode normalization the unbatched agent used)."""
         def per_step(obs, actions, valid):
-            lp, ent = _logp_entropy(params, obs, actions, valid)
+            lp, ent = logp_entropy(params, obs, actions, valid)
             return lp, ent, critic_apply(params, obs)
         lp, ent, values = jax.vmap(per_step)(
             traj["obs"], traj["actions"], traj["valid"])
@@ -85,24 +64,29 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
         return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss}
 
     @jax.jit
-    def train_episode(params, opt_state, rng):
-        k0, k1 = jax.random.split(rng)
-        state0 = env_reset(env_cfg, tables, k0, model_ids=model_ids)
-        state_T, traj = rollout(params, state0, k1)
-        obs_T = observe(env_cfg, tables, state_T).reshape(-1)
-        advs, rets = gae(traj, critic_apply(params, obs_T))
+    def train_episode(params, opt_state, rng, task_seq=None):
+        task_seq = net.prepare_task_seq(task_seq, E)
+        _, traj, bootstrap = net.run_batched_episodes(
+            env_cfg, tables, rollout, params, rng, E,
+            model_ids=model_ids, task_seq=task_seq)
+        advs, rets = jax.vmap(net.gae, in_axes=(0, 0, 0, None, None))(
+            traj["reward"], traj["value"], bootstrap, pc.gamma, pc.lam)
+        # surrogate epochs see one flat transition batch across all envs
+        flat = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), traj)
+        advs, rets = advs.reshape(-1), rets.reshape(-1)
 
         def epoch(carry, _):
             params, opt_state = carry
             (loss, stats), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, traj, advs, rets)
+                loss_fn, has_aux=True)(params, flat, advs, rets)
             params, opt_state, _ = adamw_update(opt, params, grads, opt_state)
             return (params, opt_state), loss
         (params, opt_state), losses = jax.lax.scan(
             epoch, (params, opt_state), None, length=pc.epochs)
         return params, opt_state, {
             "loss": losses[-1], "mean_reward": jnp.mean(traj["reward"]),
-            "episode_reward": jnp.sum(traj["reward"])}
+            "episode_reward": jnp.mean(jnp.sum(traj["reward"], -1))}
 
     return train_episode
 

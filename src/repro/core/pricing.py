@@ -1,0 +1,216 @@
+"""Single source of truth for the per-request cost model (Eqs. 1-5, 9-11).
+
+Every consumer of the paper's physics prices through one function,
+
+    price_actions(cfg, tables, view, actions, xp=...) -> PricingBreakdown
+
+written against the array-API namespace ``xp``: the identical code runs
+under ``jax.numpy`` (the jit/scan/vmap training and evaluation hot paths
+— ``env.action_costs``, ``baselines.greedy_oracle``) and under ``numpy``
+(the fleet-simulator hot path at ~1e5 req/s —
+``sim.backends.AnalyticalBackend``, and ``ExecuteBackend``'s
+expected-cost cross-check). New cost terms (weight-ship amortization
+today; per-layer mixed precision or KV-cache quant tomorrow) land here
+exactly once and are immediately priced identically by the controller
+that trains and the simulator that scores it.
+
+Consumer map (DESIGN.md §6):
+  env.action_costs            thin wrapper (jnp), feeds env_step/reward
+  baselines.greedy_oracle     scores the full (V, K) grid per state
+  sim.backends.AnalyticalBackend   numpy epoch pricing for the fleet loop
+  sim.backends.ExecuteBackend      expected cost for wall-clock checks
+
+Formula inventory (no per-request latency/energy math lives elsewhere):
+  Eq. 1  E_comp = P_comp * T_local                (compute_energy)
+  Eq. 2  E_trans = P_tx * 8 D / B                 (transmit_energy)
+  Eq. 4  T_remote = queue * t_job + tail / F_srv  (remote_time)
+  Eq. 5  T = T_local + T_trans + T_remote         (price_actions)
+  Eq. 9-11 + stability score                      (*_score helpers)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StateView:
+    """The slice of world state pricing needs. Env state dicts
+    (``view_from_state``), fleet measurements, and vmapped batches all
+    project onto it; per-device arrays are (n,), ``queue`` is the shared
+    server queue depth (jobs) and ``load`` the offered-load fraction of
+    ``cfg.peak_rps`` in [0, 1] (the env's generalized task feature)."""
+    model_id: object
+    bandwidth: object
+    p_tx: object
+    queue: object
+    load: object
+
+
+def view_from_state(state) -> StateView:
+    """Project an env/measured state dict onto the pricing inputs."""
+    return StateView(model_id=state["model_id"], bandwidth=state["bandwidth"],
+                     p_tx=state["p_tx"], queue=state["queue"],
+                     load=state["task"])
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingBreakdown:
+    """Per-device per-request costs and derived scores for one action set.
+
+    Times are seconds, energy joules, bytes per request. ``queue_s`` is
+    the Eq. 4 server wait *as seen by the view's queue*, already gated on
+    ``offloaded`` (a terminal cut never visits the server queue); the
+    fleet loop prices with queue=0 and adds its own measured wait.
+    ``wire_bytes`` includes the weight-ship amortization surcharge,
+    ``act_bytes`` is the raw cut activation (what an executed split must
+    measure). Scores are the paper's Eqs. 9-11 plus the beyond-paper
+    stability score of ``service_s`` (head + link, the work the device
+    serializes per request) against the offered load."""
+    head_s: object
+    tx_s: object
+    tail_s: object
+    queue_s: object
+    t_total: object
+    energy_j: object
+    act_bytes: object
+    wire_bytes: object
+    offloaded: object
+    t_full_local: object
+    e_full_local: object
+    service_s: object
+    acc_score: object
+    lat_score: object
+    energy_score: object
+    stab_score: object
+
+
+def _sigmoid(z, xp):
+    # clip keeps numpy from overflow-warning on exp of large |z|
+    z = xp.clip(z, -60.0, 60.0)
+    return 1.0 / (1.0 + xp.exp(-z))
+
+
+def local_time(lp, head_flops, xp=jnp):
+    """Eq. 5 head term: T_local = head / F_dev."""
+    return head_flops / lp.device_flops
+
+
+def transmit_time(bandwidth_bps, n_bytes, xp=jnp):
+    """Eq. 5 link term: T_trans = 8 D / B."""
+    return (n_bytes * 8.0) / xp.maximum(bandwidth_bps, 1.0)
+
+
+def remote_time(lp, tail_flops, queue_len, xp=jnp):
+    """Eq. 4: T_remote = T_queue + T_comp(tail)."""
+    return queue_len * lp.job_service_s + tail_flops / lp.server_flops
+
+
+def total_time(lp, head_flops, tail_flops, n_bytes, bandwidth_bps,
+               queue_len, xp=jnp):
+    """Eq. 5 (ungated; ``price_actions`` gates the queue on offload)."""
+    return (local_time(lp, head_flops, xp)
+            + transmit_time(bandwidth_bps, n_bytes, xp)
+            + remote_time(lp, tail_flops, queue_len, xp))
+
+
+def compute_energy(p, t_local_s, xp=jnp):
+    """Eq. 1: E_comp = P_comp * T_local."""
+    return p.p_compute * t_local_s
+
+
+def transmit_energy(p_tx_w, bandwidth_bps, n_bytes, xp=jnp):
+    """Eq. 2: E_trans = beta_k(B) * D, with beta = P_tx / throughput."""
+    return p_tx_w * (n_bytes * 8.0) / xp.maximum(bandwidth_bps, 1.0)
+
+
+def accuracy_score(w, acc, xp=jnp):
+    """Eq. 9."""
+    return _sigmoid(w.p * (acc - w.q), xp)
+
+
+def latency_score(t_total, t_all_local, xp=jnp):
+    """Eq. 10."""
+    return 1.0 - t_total / xp.maximum(t_all_local, 1e-9)
+
+
+def energy_score(e_total, e_all_local, xp=jnp):
+    """Eq. 11."""
+    return 1.0 - e_total / xp.maximum(e_all_local, 1e-9)
+
+
+def stability_score(w, utilization, xp=jnp):
+    """Beyond-paper: ~1 while the device+link absorbs the offered load
+    (u < 1), ~0 once requests queue faster than they drain (u > 1)."""
+    return _sigmoid(w.p_stab * (1.0 - utilization), xp)
+
+
+def numpy_tables(tables):
+    """Numpy snapshot of the dense profile tables: the fleet hot path
+    indexes them per epoch and must not pay jnp dispatch per call."""
+    arrays = {f.name: getattr(tables, f.name)
+              for f in dataclasses.fields(tables)
+              if hasattr(getattr(tables, f.name), "shape")}
+    return dataclasses.replace(
+        tables, **{k: np.asarray(v) for k, v in arrays.items()})
+
+
+def price_actions(cfg, tables, view: StateView, actions,
+                  xp=jnp) -> PricingBreakdown:
+    """Price actions (..., 2) = (version j, cut index l) for the devices
+    in ``view`` under ``cfg`` (EnvConfig). ``tables``' arrays must live
+    in the ``xp`` namespace (``numpy_tables`` snapshots them for np).
+
+    The server-side term (queue wait) is gated on a tail actually
+    running there: a terminal cut executes entirely on-device and never
+    visits the server queue. Charging T_queue to local execution (and
+    normalizing by the small local baseline) would make congestion
+    punish local *harder* than offload, driving every policy to offload
+    into an already-saturated server.
+    """
+    m = view.model_id
+    j, k = actions[..., 0], actions[..., 1]
+    head = tables.head_flops[m, j, k]
+    tail = tables.tail_flops[m, j, k]
+    act_bytes = tables.cut_bytes[m, j, k]
+    wire_bytes = act_bytes
+    if cfg.weight_ship_slots > 0:
+        # Amortized per-frame share of staging this version's tail weights
+        # server-side: shipped once per decision epoch (weight_ship_slots
+        # slots), spread over every frame served in that epoch. act_bytes
+        # is a per-frame quantity (env_step scales by frames_per_slot), so
+        # the divisor must include frames_per_slot too.
+        wire_bytes = wire_bytes + (tables.tail_weight_bytes[m, j, k]
+                                   / (cfg.weight_ship_slots
+                                      * cfg.frames_per_slot))
+    acc = tables.acc[m, j]
+    full = tables.full_flops[m, j]
+
+    lp, pw, w = cfg.latency, cfg.power, cfg.weights
+    head_s = local_time(lp, head, xp)
+    tx_s = transmit_time(view.bandwidth, wire_bytes, xp)
+    tail_s = tail / lp.server_flops
+    offloaded = tail > 0.0
+    queue_s = xp.where(offloaded, view.queue * lp.job_service_s, 0.0)
+    t_total = head_s + tx_s + queue_s + tail_s
+
+    energy_j = (compute_energy(pw, head_s, xp)
+                + transmit_energy(view.p_tx, view.bandwidth, wire_bytes, xp))
+    t_full_local = local_time(lp, full, xp)
+    e_full_local = compute_energy(pw, t_full_local, xp)
+
+    # per-request service time the device serializes: head compute + link
+    service_s = head_s + tx_s
+    util = view.load * cfg.peak_rps * service_s
+    return PricingBreakdown(
+        head_s=head_s, tx_s=tx_s, tail_s=tail_s, queue_s=queue_s,
+        t_total=t_total, energy_j=energy_j, act_bytes=act_bytes,
+        wire_bytes=wire_bytes, offloaded=offloaded,
+        t_full_local=t_full_local, e_full_local=e_full_local,
+        service_s=service_s,
+        acc_score=accuracy_score(w, acc, xp),
+        lat_score=latency_score(t_total, t_full_local, xp),
+        energy_score=energy_score(energy_j, e_full_local, xp),
+        stab_score=stability_score(w, util, xp))

@@ -13,13 +13,23 @@ backlog. ``stability_score`` closes the loop: given utilization
 u = offered_rps x service_s it saturates to 1 when the device+link can
 absorb the offered load and to 0 when it cannot. ``w_stab = 0`` (the
 default) keeps the paper's exact reward.
+
+The per-request score formulas (Eqs. 9-11 + stability) live in
+``repro.core.pricing`` — the single backend-polymorphic cost core — and
+are re-exported here; this module keeps the weights and the Eq. 8
+aggregation.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
+
+from repro.core.pricing import (accuracy_score, energy_score, latency_score,
+                                stability_score)
+
+__all__ = ["RewardWeights", "accuracy_score", "latency_score",
+           "energy_score", "stability_score", "reward"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,27 +50,6 @@ class RewardWeights:
                                    w_lat=self.w_lat / s,
                                    w_energy=self.w_energy / s,
                                    w_stab=self.w_stab / s)
-
-
-def accuracy_score(w: RewardWeights, acc):
-    """Eq. 9."""
-    return 1.0 / (1.0 + jnp.exp(-w.p * (acc - w.q)))
-
-
-def latency_score(t_total, t_all_local):
-    """Eq. 10."""
-    return 1.0 - t_total / jnp.maximum(t_all_local, 1e-9)
-
-
-def energy_score(e_total, e_all_local):
-    """Eq. 11."""
-    return 1.0 - e_total / jnp.maximum(e_all_local, 1e-9)
-
-
-def stability_score(w: RewardWeights, utilization):
-    """Beyond-paper: ~1 while the device+link absorbs the offered load
-    (u < 1), ~0 once requests queue faster than they drain (u > 1)."""
-    return jax.nn.sigmoid(w.p_stab * (1.0 - utilization))
 
 
 def reward(w: RewardWeights, acc_s, lat_s, energy_s, stab_s=None,

@@ -1,41 +1,35 @@
 """Request-pricing backends behind one interface.
 
-``AnalyticalBackend`` prices every request through the existing
-latency/energy/ProfileTables machinery (numpy snapshots of the env
-tables — scales to millions of simulated requests on CPU).
+``AnalyticalBackend`` prices every request through the single cost core
+(``repro.core.pricing``) with ``xp=numpy`` over numpy table snapshots —
+the identical formulas the env rewards with under jnp, at fleet scale
+(millions of simulated requests on CPU).
 
 ``ExecuteBackend`` extends it: a sampled subset of requests is routed
 through the real ``SplitServingEngine`` on a reduced config, so the
 simulated activation bytes can be cross-checked *exactly* against the
 measured ones, and the analytical latency model can be checked for
 consistency against wall-clock execution (calibrated on the first
-sample; ratios thereafter must stay within a stated tolerance).
+sample; ratios thereafter must stay within a stated tolerance). The
+expected cost it checks against comes from the same PricingBreakdown the
+fleet prices with.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import pricing
 from repro.core.env import EnvConfig, ProfileTables
+from repro.core.pricing import PricingBreakdown, StateView
 
-
-@dataclasses.dataclass(frozen=True)
-class RequestPricing:
-    """Per-device per-request cost constants for one decision epoch.
-
-    All arrays are (n_devices,). Within an epoch every request of a
-    device shares these constants (same state, same action); per-request
-    variability comes from the fleet loop's queueing recursion.
-    """
-    head_s: np.ndarray       # device compute time per request
-    tx_s: np.ndarray         # link time per request (incl. ship amortization)
-    tail_s: np.ndarray       # server compute time per request
-    energy_j: np.ndarray     # device energy per request (compute + radio)
-    act_bytes: np.ndarray    # wire activation bytes per request (no amort.)
-    offloaded: np.ndarray    # bool: does a tail run on the server
+# Per-device per-request cost constants for one decision epoch. Within an
+# epoch every request of a device shares these constants (same state,
+# same action); per-request variability comes from the fleet loop's
+# queueing recursion. Alias kept for API compatibility.
+RequestPricing = PricingBreakdown
 
 
 class AnalyticalBackend:
@@ -46,34 +40,20 @@ class AnalyticalBackend:
         self.tables = tables
         # numpy snapshots: indexing dense tables per epoch must not pay
         # jnp dispatch on the hot path
-        self._head = np.asarray(tables.head_flops)
-        self._tail = np.asarray(tables.tail_flops)
-        self._bytes = np.asarray(tables.cut_bytes)
-        self._wbytes = np.asarray(tables.tail_weight_bytes)
+        self._np_tables = pricing.numpy_tables(tables)
 
     def price(self, model_id: np.ndarray, actions: np.ndarray,
-              bandwidth: np.ndarray, p_tx: np.ndarray) -> RequestPricing:
-        cfg = self.env_cfg
-        m = np.asarray(model_id)
-        j, k = np.asarray(actions)[:, 0], np.asarray(actions)[:, 1]
-        head = self._head[m, j, k]
-        tail = self._tail[m, j, k]
-        act_bytes = self._bytes[m, j, k]
-        tx_bytes = act_bytes
-        if cfg.weight_ship_slots > 0:
-            # same amortization rule as env.action_costs
-            tx_bytes = tx_bytes + self._wbytes[m, j, k] \
-                / (cfg.weight_ship_slots * cfg.frames_per_slot)
-        lp, pw = cfg.latency, cfg.power
-        bw = np.maximum(np.asarray(bandwidth, dtype=np.float64), 1.0)
-        head_s = head / lp.device_flops
-        tx_s = tx_bytes * 8.0 / bw
-        tail_s = tail / lp.server_flops
-        energy = pw.p_compute * head_s \
-            + np.asarray(p_tx, dtype=np.float64) * tx_bytes * 8.0 / bw
-        return RequestPricing(head_s=head_s, tx_s=tx_s, tail_s=tail_s,
-                              energy_j=energy, act_bytes=act_bytes,
-                              offloaded=tail > 0.0)
+              bandwidth: np.ndarray, p_tx: np.ndarray) -> PricingBreakdown:
+        """One pricing core, numpy namespace. The view carries queue=0 —
+        the fleet loop adds its own *measured* server wait per epoch —
+        and load=0 (the stability score is a training-time signal)."""
+        view = StateView(
+            model_id=np.asarray(model_id),
+            bandwidth=np.asarray(bandwidth, dtype=np.float64),
+            p_tx=np.asarray(p_tx, dtype=np.float64),
+            queue=0.0, load=0.0)
+        return pricing.price_actions(self.env_cfg, self._np_tables, view,
+                                     np.asarray(actions), xp=np)
 
     # the analytical backend executes nothing; the fleet loop calls this
     # hook unconditionally so both backends share one interface
@@ -106,7 +86,7 @@ class ExecuteBackend(AnalyticalBackend):
         self.sample = int(sample)
         self.latency_tolerance = float(latency_tolerance)
         self.records: List[Dict] = []
-        self._calib_flops: Optional[float] = None
+        self._calib_speedup: Optional[float] = None
         self._engines = [
             SplitServingEngine(c, p, versions=tuple(v.version
                                                     for v in prof.versions))
@@ -138,7 +118,7 @@ class ExecuteBackend(AnalyticalBackend):
 
         prof = self.profiles[model_idx]
         v = prof.versions[min(j, len(prof.versions) - 1)]
-        base = int(self._bytes[model_idx, j, k]) * batch
+        base = int(self._np_tables.cut_bytes[model_idx, j, k]) * batch
         if get_version(v.version).act_bits == 8:
             base += batch * self.seq_len * 4
         return base
@@ -171,14 +151,20 @@ class ExecuteBackend(AnalyticalBackend):
         logits, measured_bytes = eng.infer(batch, cut, version)
         jax.block_until_ready(logits)
         wall_s = time.perf_counter() - t0
-        flops = float(self._head[model_idx, j, k]
-                      + self._tail[model_idx, j, k])
-        if self._calib_flops is None:
-            # first sample calibrates this host's effective FLOP/s; later
-            # samples then test the analytical model's *relative* cost
-            # structure against real execution
-            self._calib_flops = flops / max(wall_s, 1e-9)
-        est_s = flops / self._calib_flops
+        # expected compute time from the same PricingBreakdown the fleet
+        # prices with: head + tail model-seconds for this (j, k); the
+        # engine runs both halves on this host, so no link/queue terms
+        br = self.price(np.asarray([model_idx]),
+                        np.asarray([[j, k]]),
+                        np.asarray([1.0]), np.asarray([0.0]))
+        model_s = float(br.head_s[0] + br.tail_s[0])
+        if self._calib_speedup is None:
+            # first sample calibrates this host's speed relative to the
+            # modeled device/server regime; later samples then test the
+            # analytical model's *relative* cost structure against real
+            # execution
+            self._calib_speedup = model_s / max(wall_s, 1e-9)
+        est_s = model_s / self._calib_speedup
         self.records.append({
             "model": cfg.name, "version": version, "cut": cut,
             "j": int(j), "k": int(k),

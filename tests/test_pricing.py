@@ -1,0 +1,267 @@
+"""The single pricing core: numpy≡jnp parity of every PricingBreakdown
+field, terminal-cut gating, weight-ship amortization, the fixed-seed
+evaluate_policy equivalence against the historical per-slot loop, the
+unbiased random baseline, and batched (vmapped) training."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (A2CConfig, evaluate_policy, init_agent,
+                        make_paper_env, make_train_episode, make_tpu_env,
+                        env_reset, env_step)
+from repro.core import pricing
+from repro.core.baselines import POLICIES, random_policy
+from repro.core.env import action_breakdown, build_tables
+from repro.core.profiles import paper_profiles, transformer_profile
+from repro.optim import adamw_init
+
+
+def _random_view_actions(cfg, tables, seed, n):
+    r = np.random.default_rng(seed)
+    lp, pw = cfg.latency, cfg.power
+    view = pricing.StateView(
+        model_id=r.integers(0, tables.n_models, n).astype(np.int32),
+        bandwidth=r.uniform(lp.bw_min_bps, lp.bw_max_bps, n)
+        .astype(np.float32),
+        p_tx=r.uniform(pw.p_tx_min, pw.p_tx_max, n).astype(np.float32),
+        queue=np.float32(r.uniform(0.0, 12.0)),
+        load=r.uniform(0.0, 1.0, n).astype(np.float32))
+    actions = np.stack([r.integers(0, tables.n_versions, n),
+                        r.integers(0, tables.n_cuts, n)],
+                       axis=-1).astype(np.int32)
+    return view, actions
+
+
+def _assert_breakdowns_match(a, b, rtol, atol):
+    for f in dataclasses.fields(pricing.PricingBreakdown):
+        x, y = np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name))
+        if f.name == "offloaded":
+            np.testing.assert_array_equal(x, y, err_msg=f.name)
+        else:
+            np.testing.assert_allclose(x, y, rtol=rtol, atol=atol,
+                                       err_msg=f.name)
+
+
+@pytest.mark.parametrize("env_kind", ["paper", "tpu_ship"])
+@pytest.mark.parametrize("n", [1, 16])
+def test_pricing_numpy_jnp_parity(env_kind, n):
+    """Identical f32 inputs through xp=np and xp=jnp must agree to 1e-6
+    relative on every breakdown field — including the weight-ship
+    amortization surcharge (tpu env ships tail weights) and the
+    stability score."""
+    if env_kind == "paper":
+        cfg, tables = make_paper_env(peak_rps=20.0)
+    else:
+        cfg, tables = make_tpu_env(["qwen2-0.5b"], weight_ship_slots=8.0,
+                                   peak_rps=50.0)
+        assert cfg.weight_ship_slots > 0    # amortization term in play
+    np_tables = pricing.numpy_tables(tables)
+    for seed in (0, 1):
+        view, actions = _random_view_actions(cfg, tables, seed, n)
+        br_np = pricing.price_actions(cfg, np_tables, view, actions, xp=np)
+        jview = pricing.StateView(*[jnp.asarray(getattr(view, f.name))
+                                    for f in dataclasses.fields(view)])
+        br_j = pricing.price_actions(cfg, tables, jview,
+                                     jnp.asarray(actions), xp=jnp)
+        assert isinstance(br_np.t_total, np.ndarray)
+        _assert_breakdowns_match(br_np, br_j, rtol=1e-6, atol=1e-6)
+
+
+def test_pricing_parity_float64_inputs():
+    """The numpy path runs the fleet in float64; against the f32 jnp
+    tables the fields still agree to f32 precision."""
+    cfg, tables = make_paper_env(peak_rps=20.0)
+    np_tables = pricing.numpy_tables(tables)
+    view, actions = _random_view_actions(cfg, tables, 3, 8)
+    view64 = pricing.StateView(
+        model_id=view.model_id,
+        bandwidth=view.bandwidth.astype(np.float64),
+        p_tx=view.p_tx.astype(np.float64),
+        queue=float(view.queue), load=view.load.astype(np.float64))
+    br_np = pricing.price_actions(cfg, np_tables, view64, actions, xp=np)
+    jview = pricing.StateView(
+        model_id=jnp.asarray(view.model_id),
+        bandwidth=jnp.asarray(view.bandwidth),
+        p_tx=jnp.asarray(view.p_tx),
+        queue=jnp.float32(view.queue), load=jnp.asarray(view.load))
+    br_j = pricing.price_actions(cfg, tables, jview, jnp.asarray(actions))
+    _assert_breakdowns_match(br_np, br_j, rtol=1e-5, atol=1e-5)
+
+
+def test_terminal_cut_never_pays_queue():
+    """A terminal cut (tail == 0) runs fully on-device: not offloaded,
+    no Eq. 4 queue wait even when the server is congested."""
+    cfg, tables = make_paper_env()
+    n = 3
+    view = pricing.StateView(
+        model_id=np.zeros(n, np.int32),
+        bandwidth=np.full(n, cfg.latency.bw_min_bps, np.float32),
+        p_tx=np.ones(n, np.float32), queue=10.0, load=0.0)
+    last = tables.n_cuts - 1
+    term = np.tile(np.asarray([[0, last]], np.int32), (n, 1))
+    off = np.tile(np.asarray([[0, 0]], np.int32), (n, 1))
+    np_tables = pricing.numpy_tables(tables)
+    br_t = pricing.price_actions(cfg, np_tables, view, term, xp=np)
+    br_o = pricing.price_actions(cfg, np_tables, view, off, xp=np)
+    assert not br_t.offloaded.any()
+    np.testing.assert_array_equal(br_t.queue_s, 0.0)
+    np.testing.assert_array_equal(br_t.tail_s, 0.0)
+    assert br_o.offloaded.all()
+    assert (br_o.queue_s > 0.0).all()
+
+
+def test_env_action_costs_is_pricing_wrapper():
+    """env.action_costs must return exactly the breakdown's scores."""
+    cfg, tables = make_paper_env(peak_rps=10.0)
+    state = env_reset(cfg, tables, jax.random.key(0))
+    actions = jnp.asarray([[1, 1], [0, 2], [1, 0]], jnp.int32)
+    from repro.core.env import action_costs
+    acc_s, lat_s, en_s, t_total, e_infer, stab_s = action_costs(
+        cfg, tables, state, actions)
+    br = action_breakdown(cfg, tables, state, actions)
+    for got, want in ((acc_s, br.acc_score), (lat_s, br.lat_score),
+                      (en_s, br.energy_score), (t_total, br.t_total),
+                      (e_infer, br.energy_j), (stab_s, br.stab_score)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# evaluate_policy: scanned rollout ≡ the historical per-slot loop
+# --------------------------------------------------------------------------
+
+def _reference_evaluate(cfg, tables, policy, rng, episodes):
+    """The pre-refactor per-slot Python loop, kept as the oracle for the
+    scanned/jitted rewrite (same rng threading, same aggregation)."""
+    n = cfg.n_uavs
+    hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts))
+    agg = {k: 0.0 for k in ("reward", "latency", "energy", "acc_score",
+                            "lat_score", "en_score", "alive_slots")}
+    steps = 0
+    for ep in range(episodes):
+        rng, k0 = jax.random.split(rng)
+        state = env_reset(cfg, tables, k0)
+        for t in range(cfg.episode_len):
+            rng, k = jax.random.split(rng)
+            actions = policy(cfg, tables, state, jax.random.fold_in(k, 7))
+            state, r, info = env_step(cfg, tables, state, actions,
+                                      jax.random.fold_in(k, 13))
+            a_np = np.asarray(actions)
+            m_np = np.asarray(state["model_id"])
+            alive = np.asarray(info["alive"])
+            for u in range(n):
+                if alive[u]:
+                    hist[m_np[u], a_np[u, 0], a_np[u, 1]] += 1
+            agg["reward"] += float(r)
+            agg["latency"] += float(jnp.mean(info["t_total"]))
+            agg["energy"] += float(jnp.mean(info["e_infer"]))
+            agg["acc_score"] += float(jnp.mean(info["acc_s"]))
+            agg["lat_score"] += float(jnp.mean(info["lat_s"]))
+            agg["en_score"] += float(jnp.mean(info["en_s"]))
+            agg["alive_slots"] += float(jnp.sum(info["alive"]))
+            steps += 1
+    out = {k: v / steps for k, v in agg.items()}
+    out["selection_hist"] = hist
+    return out
+
+
+def test_evaluate_policy_matches_reference_loop():
+    """Fixed seed, same policy: the scanned evaluate_policy must
+    reproduce the per-slot loop's metrics (float-sum tolerance) and its
+    selection histogram exactly."""
+    cfg, tables = make_paper_env(episode_len=20)
+    got = evaluate_policy(cfg, tables, POLICIES["random"],
+                          jax.random.key(5), episodes=2)
+    want = _reference_evaluate(cfg, tables, POLICIES["random"],
+                               jax.random.key(5), episodes=2)
+    np.testing.assert_array_equal(got["selection_hist"],
+                                  want["selection_hist"])
+    for k in ("reward", "latency", "energy", "acc_score", "lat_score",
+              "en_score", "alive_slots"):
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-6,
+                                   err_msg=k)
+
+
+def test_evaluate_policy_deterministic():
+    cfg, tables = make_paper_env(episode_len=16)
+    a = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+                        jax.random.key(1), episodes=2)
+    b = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+                        jax.random.key(1), episodes=2)
+    assert a["reward"] == b["reward"]
+    np.testing.assert_array_equal(a["selection_hist"], b["selection_hist"])
+
+
+# --------------------------------------------------------------------------
+# random baseline: uniform over each model's valid versions
+# --------------------------------------------------------------------------
+
+def test_random_policy_uniform_over_valid_versions():
+    """With a 2-version model padded into a 3-version table the old
+    randint % nv sampling put 2/3 of the mass on version 0; uniform
+    sampling puts 1/2 on each valid version and none on padding."""
+    vgg = paper_profiles()["vgg"]                       # 2 versions
+    qwen = transformer_profile(                          # 3 versions
+        __import__("repro.configs", fromlist=["get_config"])
+        .get_config("qwen2-0.5b").reduced(), seq_len=8)
+    tables = build_tables([vgg, qwen])
+    assert tables.n_versions == 3
+    assert int(tables.version_valid[0].sum()) == 2
+    cfg, _ = make_paper_env(n_uavs=2)
+    state = env_reset(cfg, tables, jax.random.key(0))   # model_ids [0, 1]
+    keys = jax.random.split(jax.random.key(42), 4000)
+    acts = jax.vmap(lambda k: random_policy(cfg, tables, state, k))(keys)
+    v_dev0 = np.asarray(acts[:, 0, 0])                  # model 0: nv = 2
+    assert v_dev0.max() <= 1                            # never padding
+    frac0 = float(np.mean(v_dev0 == 0))
+    assert abs(frac0 - 0.5) < 0.04, frac0               # not the 2/3 bias
+    v_dev1 = np.asarray(acts[:, 1, 0])                  # model 1: nv = 3
+    for v in range(3):
+        assert abs(float(np.mean(v_dev1 == v)) - 1 / 3) < 0.04
+
+
+# --------------------------------------------------------------------------
+# batched training
+# --------------------------------------------------------------------------
+
+def test_batched_train_episode_deterministic_and_finite():
+    cfg, tables = make_paper_env(episode_len=24)
+    ac = A2CConfig(episodes=2, batch_envs=4)
+    params = init_agent(cfg, tables, ac, jax.random.key(0))
+    opt = adamw_init(params)
+    step = make_train_episode(cfg, tables, ac)
+    _, _, s1 = step(params, opt, jax.random.key(7))
+    _, _, s2 = step(params, opt, jax.random.key(7))
+    assert float(s1["loss"]) == float(s2["loss"])
+    assert all(np.isfinite(float(v)) for v in s1.values())
+
+
+def test_batched_train_accepts_per_env_task_seq():
+    cfg, tables = make_paper_env(episode_len=24, peak_rps=20.0)
+    ac = A2CConfig(episodes=2, batch_envs=3)
+    params = init_agent(cfg, tables, ac, jax.random.key(0))
+    opt = adamw_init(params)
+    step = make_train_episode(cfg, tables, ac)
+    r = np.random.default_rng(0)
+    seq = jnp.asarray(r.uniform(0, 1, (3, cfg.episode_len, cfg.n_uavs)),
+                      jnp.float32)
+    _, _, s_env = step(params, opt, jax.random.key(9), seq)
+    # distinct per-env traces must actually change the rollout vs a
+    # shared 2-D sequence broadcast across envs
+    shared = jnp.broadcast_to(seq[0][None], seq.shape)
+    _, _, s_shared = step(params, opt, jax.random.key(9), shared)
+    assert float(s_env["loss"]) != float(s_shared["loss"])
+    _, _, s_2d = step(params, opt, jax.random.key(9), seq[0])
+    assert float(s_2d["loss"]) == pytest.approx(float(s_shared["loss"]))
+
+
+def test_batched_ppo_trains():
+    from repro.core import ppo as PPO
+    cfg, tables = make_paper_env(episode_len=24)
+    _, hist = PPO.train(cfg, tables,
+                        PPO.PPOConfig(episodes=3, batch_envs=4),
+                        jax.random.key(0))
+    assert len(hist) == 3
+    assert all(np.isfinite(h["mean_reward"]) for h in hist)
