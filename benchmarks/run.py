@@ -21,6 +21,7 @@ System benches:
   roofline_suite        — dominant roofline terms from results/dryrun.jsonl
   serving_decode        — us/token through the serving engine (reduced model)
   split_inference       — EdgeRL split execution vs monolithic forward
+  scenario_sweep        — every registered scenario preset via run_scenario
   train_throughput      — A2C episodes/s, batched (vmap) vs looped
   pricing_numpy_throughput — numpy pricing-core actions/s (fleet hot path)
   kernels_interpret     — Pallas flash-attention kernel (interpret mode)
@@ -77,9 +78,8 @@ def table1_profiles():
 
 
 def _sweep(weight_name: str, fig: str, use_agent: bool, episodes: int):
-    from repro.core import (A2CConfig, RewardWeights, agent_policy,
-                            evaluate_policy, make_paper_env, train_agent)
-    from repro.core.baselines import POLICIES
+    from repro.core import RewardWeights, evaluate_policy, make_paper_env
+    from repro.policies import build_policy
     for wv in (0.0, 0.25, 0.5, 0.75, 1.0):
         rest = (1.0 - wv) / 2
         kw = {"w_acc": rest, "w_lat": rest, "w_energy": rest}
@@ -87,10 +87,10 @@ def _sweep(weight_name: str, fig: str, use_agent: bool, episodes: int):
         cfg, tables = make_paper_env(weights=RewardWeights(**kw))
         t0 = time.perf_counter()
         if use_agent:
-            params, _ = train_agent(cfg, tables, A2CConfig(episodes=episodes))
-            pol = agent_policy(params)
+            pol = build_policy("a2c", cfg, tables, episodes=episodes)
+            pol.train()
         else:
-            pol = POLICIES["greedy_oracle"]
+            pol = build_policy("greedy_oracle", cfg, tables)
         m = evaluate_policy(cfg, tables, pol, jax.random.key(0), episodes=2)
         us = (time.perf_counter() - t0) * 1e6
         modal = ";".join(f"{k}:v{v[0]}c{v[1]}"
@@ -117,9 +117,8 @@ def table2_cut_selection(use_agent=False, episodes=200):
     """Weight extremes; paper Table II qualitative claims: w_lat=1 pushes
     cuts LATER than w_lat=0 (transmission postpones offload); w_energy=1
     pulls cuts EARLY again."""
-    from repro.core import (A2CConfig, RewardWeights, agent_policy,
-                            evaluate_policy, make_paper_env, train_agent)
-    from repro.core.baselines import POLICIES
+    from repro.core import RewardWeights, evaluate_policy, make_paper_env
+    from repro.policies import build_policy
     results = {}
     for tag, kw in (("w2_0", dict(w_acc=0.5, w_lat=0.0, w_energy=0.5)),
                     ("w2_1", dict(w_acc=0.0, w_lat=1.0, w_energy=0.0)),
@@ -128,10 +127,10 @@ def table2_cut_selection(use_agent=False, episodes=200):
         cfg, tables = make_paper_env(weights=RewardWeights(**kw))
         t0 = time.perf_counter()
         if use_agent:
-            params, _ = train_agent(cfg, tables, A2CConfig(episodes=episodes))
-            pol = agent_policy(params)
+            pol = build_policy("a2c", cfg, tables, episodes=episodes)
+            pol.train()
         else:
-            pol = POLICIES["greedy_oracle"]
+            pol = build_policy("greedy_oracle", cfg, tables)
         m = evaluate_policy(cfg, tables, pol, jax.random.key(0), episodes=2)
         us = (time.perf_counter() - t0) * 1e6
         results[tag] = m["modal_selection"]
@@ -148,18 +147,19 @@ def table2_cut_selection(use_agent=False, episodes=200):
 
 
 def a2c_convergence(episodes=250):
-    from repro.core import (A2CConfig, agent_policy, evaluate_policy,
-                            make_paper_env, train_agent)
-    from repro.core.baselines import POLICIES
+    from repro.core import evaluate_policy, make_paper_env
+    from repro.policies import build_policy
     cfg, tables = make_paper_env()
     t0 = time.perf_counter()
-    params, hist = train_agent(cfg, tables, A2CConfig(episodes=episodes))
+    pol = build_policy("a2c", cfg, tables, episodes=episodes)
+    hist = pol.train()
     us = (time.perf_counter() - t0) * 1e6 / episodes
     first = np.mean([h["mean_reward"] for h in hist[:20]])
     last = np.mean([h["mean_reward"] for h in hist[-20:]])
-    oracle = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+    oracle = evaluate_policy(cfg, tables,
+                             build_policy("greedy_oracle", cfg, tables),
                              jax.random.key(0), episodes=2)["reward"]
-    agent = evaluate_policy(cfg, tables, agent_policy(params),
+    agent = evaluate_policy(cfg, tables, pol,
                             jax.random.key(0), episodes=2)["reward"]
     row("a2c_convergence", us,
         f"first20={first:.3f} last20={last:.3f} agent_eval={agent:.3f} "
@@ -168,11 +168,14 @@ def a2c_convergence(episodes=250):
 
 def baseline_policies():
     from repro.core import evaluate_policy, make_paper_env
-    from repro.core.baselines import POLICIES
+    from repro.policies import build_policy, get_policy_spec, policy_names
     cfg, tables = make_paper_env()
-    for name, pol in POLICIES.items():
+    for name in policy_names():
+        if get_policy_spec(name).trainable:
+            continue
         t0 = time.perf_counter()
-        m = evaluate_policy(cfg, tables, pol, jax.random.key(0), episodes=2)
+        m = evaluate_policy(cfg, tables, build_policy(name, cfg, tables),
+                            jax.random.key(0), episodes=2)
         us = (time.perf_counter() - t0) * 1e6
         row(f"baseline_{name}", us,
             f"reward={m['reward']:.3f} lat_ms={m['latency']*1e3:.1f} "
@@ -432,20 +435,43 @@ def pricing_numpy_throughput(n_devices=4096, iters=200):
 def fleet_sim(n_requests=100_000):
     """repro.sim throughput: analytical-backend requests/s + epochs/s."""
     from repro.core import make_paper_env
-    from repro.core.baselines import POLICIES
+    from repro.policies import build_policy
     from repro.sim import FleetConfig, PoissonTrace, simulate
     cfg, tables = make_paper_env(n_uavs=8, slot_seconds=10.0)
     trace = PoissonTrace(rate_rps=15.0)
+    pol = build_policy("greedy_oracle", cfg, tables)
     kw = dict(n_requests=n_requests, seed=0, fleet=FleetConfig(slo_s=1.0))
-    simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)  # warm
+    simulate(cfg, tables, pol, trace, **kw)  # warm
     t0 = time.perf_counter()
-    res = simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)
+    res = simulate(cfg, tables, pol, trace, **kw)
     dt = time.perf_counter() - t0
     s = res.summary
     row("fleet_sim", dt / max(res.epochs, 1) * 1e6,
         f"per_epoch,req_per_s={res.served/dt:.0f} epochs_per_s="
         f"{res.epochs/dt:.1f} requests={res.served} "
         f"p95_s={s['p95']:.3f} slo_att={s['slo_attainment']:.3f}")
+
+
+def scenario_sweep(n_requests=2000):
+    """Every registered scenario preset through run_scenario with the
+    static roster — the one-command experiment surface as a perf/smoke
+    case (execute presets skipped: engine compiles dominate)."""
+    from repro.scenarios import get_scenario, run_scenario, scenario_names
+    for name in scenario_names():
+        sc = get_scenario(name)
+        if sc.execute:
+            row(f"scenario_{name}", 0.0, "skipped=execute_backend")
+            continue
+        t0 = time.perf_counter()
+        rep = run_scenario(sc, ("greedy_oracle", "device_only"),
+                           n_requests=n_requests, seeds=(0,))
+        us = (time.perf_counter() - t0) * 1e6
+        g = rep.results["greedy_oracle"].mean
+        d = rep.results["device_only"].mean
+        row(f"scenario_{name}", us,
+            f"requests={n_requests} oracle_p95_s={g['p95']:.3f} "
+            f"oracle_slo_att={g['slo_attainment']:.3f} "
+            f"device_only_slo_att={d['slo_attainment']:.3f}")
 
 
 def kernels_interpret():
@@ -498,7 +524,7 @@ ALL = [table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
        a2c_convergence, ablation_a2c, ablation_agents, roofline_suite,
        hillclimb_variants,
        serving_decode, split_inference, continuous_batching,
-       scheduler_throughput, fleet_sim, train_throughput,
+       scheduler_throughput, fleet_sim, scenario_sweep, train_throughput,
        pricing_numpy_throughput,
        kernels_interpret, quant_matmul]
 

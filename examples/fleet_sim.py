@@ -1,20 +1,15 @@
-"""Fleet simulation via the library API (DESIGN.md §4): train the
-stability-aware controller under domain-randomized load, then stress it
-against bursty (MMPP) traffic next to the static baselines — the same
-request stream for every policy, per-request metrics out.
+"""Fleet simulation via the scenario API (DESIGN.md §4/§7): take the
+``paper-mmpp-burst`` preset — train the stability-aware controller under
+domain-randomized load, then stress it against bursty (MMPP) traffic
+next to the static baselines, the same request stream for every policy —
+and optionally persist the trained controller as a reusable artifact.
 
-    PYTHONPATH=src python examples/fleet_sim.py [--devices 4]
+    PYTHONPATH=src python examples/fleet_sim.py [--devices 4] \
+        [--save-policy controller.npz]
 """
 import argparse
 
-import numpy as np
-
-from repro.core import (A2CConfig, RewardWeights, agent_policy,
-                        make_paper_env, train_agent)
-from repro.core.baselines import POLICIES
-from repro.core.latency import LatencyParams
-from repro.sim import FleetConfig, MMPPTrace, simulate
-from repro.sim.traces import RandomRateTrace
+from repro.scenarios import get_scenario, run_scenario
 
 
 def main():
@@ -22,38 +17,24 @@ def main():
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--episodes", type=int, default=500)
     ap.add_argument("--requests", type=int, default=20_000)
+    ap.add_argument("--save-policy", default=None,
+                    help="persist the trained controller (.npz)")
     args = ap.parse_args()
 
-    n, burst = args.devices, 30.0
-    cfg, tables = make_paper_env(
-        n_uavs=n, slot_seconds=10.0, peak_rps=burst,
-        frames_per_slot=10.0 * burst,   # drain parity with the fleet
-        latency=LatencyParams(server_flops=0.55e12 * n, bw_max_bps=1e9),
-        weights=RewardWeights(w_acc=0.05, w_lat=0.1, w_energy=0.15,
-                              w_stab=0.7))
-    mids = np.zeros(n, np.int32)          # homogeneous vgg fleet
+    scenario = get_scenario("paper-mmpp-burst").replace(
+        devices=args.devices, episodes=args.episodes,
+        n_requests=args.requests)
+    report = run_scenario(
+        scenario, ("a2c", "device_only", "full_offload"),
+        save_policies={"a2c": args.save_policy} if args.save_policy
+        else None,
+        verbose=True)
 
-    print(f"training controller ({args.episodes} episodes) ...")
-    params, _ = train_agent(cfg, tables,
-                            A2CConfig(episodes=args.episodes,
-                                      entropy_coef=0.03),
-                            trace=RandomRateTrace(max_rps=burst))
-
-    trace = MMPPTrace(rate_low_rps=2.0, rate_high_rps=burst)
-    print(f"\n{'policy':14s} {'p50_s':>8s} {'p95_s':>8s} {'slo_att':>8s} "
-          f"{'E/req_J':>8s}")
-    for name, pol in (("a2c", agent_policy(params)),
-                      ("device_only", POLICIES["device_only"]),
-                      ("full_offload", POLICIES["full_offload"])):
-        runs = [simulate(cfg, tables, pol, trace,
-                         n_requests=args.requests, seed=seed,
-                         fleet=FleetConfig(slo_s=2.0), model_ids=mids)
-                for seed in (0, 2, 4)]
-        m = {k: float(np.mean([r.summary[k] for r in runs]))
-             for k in ("p50", "p95", "slo_attainment",
-                       "energy_per_request_j")}
-        print(f"{name:14s} {m['p50']:8.3f} {m['p95']:8.2f} "
-              f"{m['slo_attainment']:8.3f} {m['energy_per_request_j']:8.3f}")
+    best = max(report.results.values(),
+               key=lambda r: r.mean["slo_attainment"])
+    print(f"\nbest SLO attainment: {best.name} "
+          f"({best.mean['slo_attainment']:.3f} over paired seeds "
+          f"{list(report.seeds)})")
 
 
 if __name__ == "__main__":

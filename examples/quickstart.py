@@ -1,6 +1,7 @@
 """Quickstart: train the EdgeRL A2C controller on the paper's testbed env
 (3 UAVs running VGG / ResNet / DenseNet against one edge server) and
-compare the learned policy with the static baselines.
+compare the learned policy with the static baselines — all policies
+built through the canonical registry (repro.policies).
 
     PYTHONPATH=src python examples/quickstart.py [--episodes 300]
 """
@@ -8,9 +9,8 @@ import argparse
 
 import jax
 
-from repro.core import (A2CConfig, RewardWeights, agent_policy,
-                        evaluate_policy, make_paper_env, train_agent)
-from repro.core.baselines import POLICIES
+from repro.core import RewardWeights, evaluate_policy, make_paper_env
+from repro.policies import build_policy, get_policy_spec, policy_names
 
 
 def main():
@@ -29,13 +29,15 @@ def main():
           f"{args.w_lat:.2f},{args.w_energy:.2f})")
 
     print(f"\ntraining A2C for {args.episodes} episodes ...")
-    params, hist = train_agent(cfg, tables, A2CConfig(episodes=args.episodes),
-                               log_every=max(args.episodes // 6, 1))
+    a2c = build_policy("a2c", cfg, tables, episodes=args.episodes,
+                       entropy_coef=0.01)
+    a2c.train(log_every=max(args.episodes // 6, 1))
 
     print("\npolicy comparison (2 eval episodes each):")
-    pols = dict(POLICIES)
-    pols["a2c_agent"] = agent_policy(params)
-    for name, pol in pols.items():
+    statics = [n for n in policy_names()
+               if not get_policy_spec(n).trainable]
+    for name in statics + ["a2c"]:
+        pol = a2c if name == "a2c" else build_policy(name, cfg, tables)
         m = evaluate_policy(cfg, tables, pol, jax.random.key(1), episodes=2)
         modal = " ".join(f"{k}=v{v[0]}c{v[1]}"
                          for k, v in m["modal_selection"].items())

@@ -1,29 +1,37 @@
-"""Trace-driven fleet simulation CLI: run the EdgeRL controller (or a
-static baseline) against request-level traffic and report per-request
-latency percentiles, SLO attainment, goodput and energy.
+"""Trace-driven fleet simulation CLI over the scenario/policy registries:
+run any registered policy roster against a named scenario preset (or an
+ad-hoc scenario assembled from flags) and report per-request latency
+percentiles, SLO attainment, goodput and energy.
 
-    PYTHONPATH=src python scripts/simulate.py \
-        --trace diurnal --devices 8 --requests 100000
+    # what's on the menu
+    PYTHONPATH=src python scripts/simulate.py --list-scenarios
 
-    # compare the trained controller against the static baselines under
-    # bursty (MMPP) traffic — same seeds => identical request streams
-    PYTHONPATH=src python scripts/simulate.py --trace mmpp \
-        --compare a2c,device_only,full_offload --seeds 0,1,2
+    # one preset, its default policy roster
+    PYTHONPATH=src python scripts/simulate.py --scenario paper-mmpp-burst
+
+    # preset + overrides + explicit roster (paired request streams)
+    PYTHONPATH=src python scripts/simulate.py --scenario paper-mmpp-burst \
+        --compare a2c,ppo,device_only,full_offload --requests 20000
+
+    # train once, persist the controller, reload it later (identical
+    # paired-seed metrics, no retraining)
+    PYTHONPATH=src python scripts/simulate.py --scenario diurnal-fleet \
+        --compare a2c --save-policy controller.npz
+    PYTHONPATH=src python scripts/simulate.py --scenario diurnal-fleet \
+        --compare a2c,device_only --load-policy controller.npz
+
+    # no --scenario: flags assemble a custom scenario (legacy behavior)
+    PYTHONPATH=src python scripts/simulate.py --trace diurnal --devices 8 \
+        --requests 100000
 
     # cross-check the analytical backend against real SplitServingEngine
-    # execution on a reduced transformer (TPU env)
-    PYTHONPATH=src python scripts/simulate.py --env tpu --execute \
-        --sample 16 --requests 20000
-
-The default paper-env fleet is the "UAV testbed scaled up": per-device
-server provisioning held at the 3-UAV paper ratio, WiFi-6-class uplink
-(1 Gb/s max), 10 s decision slots, and the beyond-paper stability-aware
-reward (RewardWeights.w_stab) so the trained controller knows about
-request-level capacity (see DESIGN.md §5).
+    # execution on a reduced transformer
+    PYTHONPATH=src python scripts/simulate.py --scenario tpu-execute
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -33,192 +41,255 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core import (A2CConfig, RewardWeights, agent_policy,
-                        make_paper_env, make_tpu_env, train_agent,
-                        transformer_profile)
-from repro.core.baselines import POLICIES
-from repro.core.latency import LatencyParams
-from repro.sim import (AnalyticalBackend, ExecuteBackend, FleetConfig,
-                       get_trace, simulate)
-from repro.sim.traces import RandomRateTrace
+from repro.core import RewardWeights
+from repro.policies import get_policy_spec, policy_names
+from repro.scenarios import (Scenario, get_scenario, run_scenario,
+                             scenario_names)
 
-POLICY_CHOICES = ("a2c", "oracle", "device_only", "full_offload", "random")
-_BASELINES = {"oracle": "greedy_oracle", "device_only": "device_only",
-              "full_offload": "full_offload", "random": "random"}
+# Flag defaults live here (not on the parser): the parser suppresses
+# absent flags so a preset scenario only sees the overrides the user
+# actually typed, while the no-scenario path fills in from this table.
+DEFAULTS = dict(
+    scenario=None, list_scenarios=False,
+    trace="diurnal", devices=8, requests=100_000,
+    policy=None, compare=None, seeds="0",
+    episodes=300, train_seed=0, save_policy=None, load_policy=None,
+    slo_ms=2000.0, slot_seconds=10.0,
+    rate=6.0, rate_low=2.0, rate_high=30.0, peak_rps=30.0,
+    replay_file=None, models="cycle",
+    w_acc=0.05, w_lat=0.10, w_energy=0.15, w_stab=0.70,
+    env="paper", arch="qwen2-0.5b", execute=False, sample=16, exec_seq=32,
+    json=None,
+)
 
-
-def build_trace(args):
-    if args.trace == "poisson":
-        return get_trace("poisson", rate_rps=args.rate)
-    if args.trace == "mmpp":
-        return get_trace("mmpp", rate_low_rps=args.rate_low,
-                         rate_high_rps=args.rate_high)
-    if args.trace == "diurnal":
-        return get_trace("diurnal", base_rps=args.rate_low,
-                         peak_rps=args.rate_high)
-    if args.trace == "uniform":
-        return get_trace("uniform", max_rps=args.rate_high)
-    if args.trace == "replay":
-        if not args.replay_file:
-            raise SystemExit("--trace replay needs --replay-file (.npy)")
-        return get_trace("replay", counts=np.load(args.replay_file),
-                         slot_seconds_recorded=args.slot_seconds)
-    raise SystemExit(f"unknown trace {args.trace}")
+# which CLI rate flags feed which trace constructor kwargs
+_TRACE_ARGS = {
+    "poisson": {"rate": "rate_rps"},
+    "mmpp": {"rate_low": "rate_low_rps", "rate_high": "rate_high_rps"},
+    "diurnal": {"rate_low": "base_rps", "rate_high": "peak_rps"},
+    "uniform": {"rate_high": "max_rps"},
+    "replay": {},
+}
 
 
-def build_env(args):
-    """Returns (env_cfg, tables, model_ids, backend_factory)."""
-    weights = RewardWeights(w_acc=args.w_acc, w_lat=args.w_lat,
-                            w_energy=args.w_energy, w_stab=args.w_stab)
-    if args.env == "tpu":
-        import jax
-
-        from repro.configs import get_config
-        from repro.models import init
-
-        archs = [args.arch] * args.devices
-        env_cfg, tables = make_tpu_env(
-            archs, weights=weights, reduced=True, seq_len=args.exec_seq,
-            slot_seconds=args.slot_seconds, peak_rps=args.peak_rps)
-        model_ids = np.zeros(args.devices, np.int32)
-
-        def backend_factory():
-            if not args.execute:
-                return AnalyticalBackend(env_cfg, tables)
-            cfg = get_config(args.arch).reduced()
-            prof = transformer_profile(cfg, seq_len=args.exec_seq)
-            params = init(cfg, jax.random.key(0))
-            return ExecuteBackend(env_cfg, tables, [cfg], [prof], [params],
-                                  seq_len=args.exec_seq, sample=args.sample)
-        return env_cfg, tables, model_ids, backend_factory
-
-    if args.execute:
-        raise SystemExit("--execute needs --env tpu (the executable "
-                         "engine serves the transformer stack)")
-    # paper env, fleet-scaled: hold per-device server provisioning at the
-    # paper's 3-UAV ratio and give the uplink a WiFi-6-class ceiling
-    lat = LatencyParams(server_flops=0.55e12 * args.devices,
-                        bw_max_bps=1e9)
-    env_cfg, tables = make_paper_env(
-        weights=weights, n_uavs=args.devices, latency=lat,
-        slot_seconds=args.slot_seconds, peak_rps=args.peak_rps,
-        # one frame per request at saturation: keeps the env's battery
-        # drain per slot equal to the fleet's per-request metering
-        frames_per_slot=args.slot_seconds * max(args.peak_rps, 1.0))
-    if args.models == "cycle":
-        model_ids = np.arange(args.devices, dtype=np.int32) % tables.n_models
-    else:
-        model_ids = np.full(args.devices, tables.names.index(args.models),
-                            np.int32)
-    return env_cfg, tables, model_ids, \
-        lambda: AnalyticalBackend(env_cfg, tables)
-
-
-def build_policy(name, env_cfg, tables, args):
-    if name != "a2c":
-        return POLICIES[_BASELINES[name]]
-    peak = args.peak_rps if args.peak_rps > 0 else 2.0 * args.rate
-    print(f"training A2C controller ({args.episodes} episodes, "
-          f"domain-randomized load up to {peak:.0f} rps) ...", flush=True)
-    params, hist = train_agent(
-        env_cfg, tables,
-        A2CConfig(episodes=args.episodes, entropy_coef=0.03),
-        seed=args.train_seed,
-        trace=RandomRateTrace(max_rps=peak) if env_cfg.peak_rps > 0
-        else None)
-    last = np.mean([h["mean_reward"] for h in hist[-15:]])
-    print(f"  trained: mean reward (last 15 episodes) = {last:+.3f}")
-    return agent_policy(params)
-
-
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
-        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--trace", default="diurnal",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        argument_default=argparse.SUPPRESS)
+    ap.add_argument("--scenario", help="named preset; other flags override "
+                    "its fields (see --list-scenarios)")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print registered scenario presets and exit")
+    ap.add_argument("--trace",
                     choices=("poisson", "mmpp", "diurnal", "uniform",
                              "replay"))
-    ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--requests", type=int, default=100_000)
-    ap.add_argument("--policy", default="a2c", choices=POLICY_CHOICES)
-    ap.add_argument("--compare", default=None,
+    ap.add_argument("--devices", type=int)
+    ap.add_argument("--requests", type=int)
+    ap.add_argument("--policy", help="single policy (registry name)")
+    ap.add_argument("--compare",
                     help="comma-separated policies; overrides --policy")
-    ap.add_argument("--seeds", default="0",
+    ap.add_argument("--seeds",
                     help="comma-separated sim seeds; metrics average "
                     "over them (same seed = same request stream)")
-    ap.add_argument("--episodes", type=int, default=300)
-    ap.add_argument("--train-seed", type=int, default=0)
-    ap.add_argument("--slo-ms", type=float, default=2000.0)
-    ap.add_argument("--slot-seconds", type=float, default=10.0)
-    ap.add_argument("--rate", type=float, default=6.0,
+    ap.add_argument("--episodes", type=int,
+                    help="training budget for trainable policies")
+    ap.add_argument("--train-seed", type=int)
+    ap.add_argument("--save-policy", metavar="PATH",
+                    help="write each trained policy as an .npz artifact "
+                    "(name inserted before the extension when several "
+                    "trainable policies run)")
+    ap.add_argument("--load-policy", metavar="PATH",
+                    help="load trainable policies from artifacts instead "
+                    "of retraining (same PATH convention)")
+    ap.add_argument("--slo-ms", type=float)
+    ap.add_argument("--slot-seconds", type=float)
+    ap.add_argument("--rate", type=float,
                     help="poisson rate (requests/s/device)")
-    ap.add_argument("--rate-low", type=float, default=2.0,
+    ap.add_argument("--rate-low", type=float,
                     help="mmpp calm rate / diurnal base rate")
-    ap.add_argument("--rate-high", type=float, default=30.0,
+    ap.add_argument("--rate-high", type=float,
                     help="mmpp burst rate / diurnal peak / uniform max")
-    ap.add_argument("--peak-rps", type=float, default=30.0,
+    ap.add_argument("--peak-rps", type=float,
                     help="load-feature saturation rate; 0 disables the "
                     "stability reward term (paper-faithful)")
-    ap.add_argument("--replay-file", default=None)
-    ap.add_argument("--models", default="cycle",
-                    choices=("cycle", "vgg", "resnet", "densenet"),
+    ap.add_argument("--replay-file")
+    ap.add_argument("--models", choices=("cycle", "vgg", "resnet",
+                                         "densenet"),
                     help="paper-env fleet composition")
-    ap.add_argument("--w-acc", type=float, default=0.05)
-    ap.add_argument("--w-lat", type=float, default=0.10)
-    ap.add_argument("--w-energy", type=float, default=0.15)
-    ap.add_argument("--w-stab", type=float, default=0.70)
-    ap.add_argument("--env", default="paper", choices=("paper", "tpu"))
-    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--w-acc", type=float)
+    ap.add_argument("--w-lat", type=float)
+    ap.add_argument("--w-energy", type=float)
+    ap.add_argument("--w-stab", type=float)
+    ap.add_argument("--env", choices=("paper", "tpu"))
+    ap.add_argument("--arch")
     ap.add_argument("--execute", action="store_true",
                     help="cross-check a sampled subset through the real "
                     "SplitServingEngine (tpu env)")
-    ap.add_argument("--sample", type=int, default=16)
-    ap.add_argument("--exec-seq", type=int, default=32)
-    ap.add_argument("--json", default=None, help="write results JSON here")
-    args = ap.parse_args()
+    ap.add_argument("--sample", type=int)
+    ap.add_argument("--exec-seq", type=int)
+    ap.add_argument("--json", help="write results JSON here")
+    return ap
 
-    trace = build_trace(args)
-    env_cfg, tables, model_ids, backend_factory = build_env(args)
-    fleet = FleetConfig(slo_s=args.slo_ms / 1e3)
-    seeds = [int(s) for s in args.seeds.split(",")]
-    names = (args.compare.split(",") if args.compare else [args.policy])
-    for nm in names:
-        if nm not in POLICY_CHOICES:
-            ap.error(f"unknown policy {nm!r}; choices {POLICY_CHOICES}")
 
-    print(f"fleet: {args.devices} devices, trace={trace.name} "
-          f"(mean {trace.mean_rps:.1f} rps/device), slo={fleet.slo_s}s, "
-          f"requests={args.requests} x seeds {seeds}")
-    hdr = (f"{'policy':14s} {'requests':>9s} {'p50_s':>8s} {'p95_s':>8s} "
-           f"{'p99_s':>8s} {'slo_att':>8s} {'goodput':>8s} {'E/req_J':>8s} "
-           f"{'drop':>6s}")
-    out = {"config": {k: v for k, v in vars(args).items()}, "policies": {}}
-    rows_printed = False
-    for name in names:
-        policy = build_policy(name, env_cfg, tables, args)
-        per_seed = []
-        cross = None
-        for seed in seeds:
-            res = simulate(env_cfg, tables, policy, trace,
-                           n_requests=args.requests, seed=seed, fleet=fleet,
-                           backend=backend_factory(), model_ids=model_ids)
-            per_seed.append(res.summary)
-            cross = res.cross_check or cross
-        mean = {k: float(np.mean([s[k] for s in per_seed]))
-                for k in per_seed[0] if k != "unit"}
-        if not rows_printed:
-            print("\n" + hdr)
-            rows_printed = True
-        print(f"{name:14s} {mean['count']:9.0f} {mean['p50']:8.3f} "
-              f"{mean['p95']:8.2f} {mean['p99']:8.2f} "
-              f"{mean['slo_attainment']:8.3f} {mean['goodput']:8.1f} "
-              f"{mean['energy_per_request_j']:8.3f} {mean['dropped']:6.0f}")
-        out["policies"][name] = {"mean": mean, "per_seed": per_seed}
-        if cross:
-            out["policies"][name]["cross_check"] = {
-                k: v for k, v in cross.items() if k != "records"}
-    if cross := next((out["policies"][n].get("cross_check")
-                      for n in names if out["policies"][n].get("cross_check")),
-                     None):
+def replay_kw(replay_file, slot_seconds) -> dict:
+    """The one spelling of the replay-trace kwargs (both the preset
+    override path and the bare --trace replay path build them here)."""
+    if not replay_file:
+        raise SystemExit("--trace replay needs --replay-file (.npy)")
+    return {"counts": np.load(replay_file),
+            "slot_seconds_recorded": slot_seconds}
+
+
+def trace_override(sc: Scenario, provided: dict, merged: dict) -> Scenario:
+    """Apply --trace/--rate*/--replay-file on top of a scenario: a trace
+    *kind* change rebuilds its kwargs from the merged flag values; rate
+    flags alone patch only the matching kwargs of the current kind."""
+    rate_flags = {"rate", "rate_low", "rate_high", "replay_file"}
+    if not ({"trace"} | rate_flags) & set(provided):
+        return sc
+    name = merged["trace"] if "trace" in provided else sc.trace
+    argmap = _TRACE_ARGS[name]
+    applicable = set(argmap) | ({"replay_file"} if name == "replay"
+                                else set())
+    stray = (rate_flags & set(provided)) - applicable
+    if stray:
+        flags = ", ".join("--" + f.replace("_", "-") for f in sorted(stray))
+        expects = ", ".join("--" + f.replace("_", "-")
+                            for f in sorted(applicable)) or "no rate flags"
+        raise SystemExit(f"{flags}: not applicable to trace {name!r} "
+                         f"(which takes {expects}); the override would "
+                         "be silently ignored")
+    if name == sc.trace:
+        kw = dict(sc.trace_kw)
+        src = provided
+    else:
+        kw = {}
+        src = merged     # fresh kind: every mapped kwarg from merged
+    for flag, key in argmap.items():
+        if flag in src:
+            kw[key] = src[flag]
+    if name == "replay":
+        kw = replay_kw(merged.get("replay_file"),
+                       merged["slot_seconds"] if "slot_seconds" in provided
+                       else sc.slot_seconds)
+    return sc.replace(trace=name, trace_kw=kw)
+
+
+def apply_overrides(sc: Scenario, provided: dict, merged: dict) -> Scenario:
+    """Explicitly-typed flags override preset fields, field by field."""
+    direct = {"devices": "devices", "requests": "n_requests",
+              "slot_seconds": "slot_seconds", "peak_rps": "peak_rps",
+              "models": "models", "env": "env", "arch": "arch",
+              "execute": "execute", "sample": "sample",
+              "exec_seq": "exec_seq", "episodes": "episodes",
+              "train_seed": "train_seed"}
+    repl = {field: provided[flag] for flag, field in direct.items()
+            if flag in provided}
+    if "slo_ms" in provided:
+        repl["slo_s"] = provided["slo_ms"] / 1e3
+    if "seeds" in provided:
+        repl["seeds"] = tuple(int(s) for s in provided["seeds"].split(","))
+    wflags = {"w_acc": "w_acc", "w_lat": "w_lat", "w_energy": "w_energy",
+              "w_stab": "w_stab"}
+    wkw = {field: provided[flag] for flag, field in wflags.items()
+           if flag in provided}
+    if wkw:
+        repl["weights"] = dataclasses.replace(sc.weights, **wkw)
+    if repl:
+        sc = sc.replace(**repl)
+    return trace_override(sc, provided, merged)
+
+
+def scenario_from_args(merged: dict) -> Scenario:
+    """No --scenario: assemble an ad-hoc scenario from the flag values
+    (the CLI's historical default behavior, now one declaration)."""
+    trace = merged["trace"]
+    kw = {key: merged[flag] for flag, key in _TRACE_ARGS[trace].items()}
+    if trace == "replay":
+        kw = replay_kw(merged["replay_file"], merged["slot_seconds"])
+    return Scenario(
+        name="custom",
+        description="ad-hoc scenario assembled from CLI flags",
+        env=merged["env"], devices=merged["devices"],
+        arch=merged["arch"], models=merged["models"],
+        weights=RewardWeights(w_acc=merged["w_acc"], w_lat=merged["w_lat"],
+                              w_energy=merged["w_energy"],
+                              w_stab=merged["w_stab"]),
+        slot_seconds=merged["slot_seconds"], peak_rps=merged["peak_rps"],
+        slo_s=merged["slo_ms"] / 1e3,
+        seeds=tuple(int(s) for s in merged["seeds"].split(",")),
+        n_requests=merged["requests"], episodes=merged["episodes"],
+        train_seed=merged["train_seed"], execute=merged["execute"],
+        sample=merged["sample"], exec_seq=merged["exec_seq"],
+        trace=trace, trace_kw=kw)
+
+
+def artifact_path(path: str, name: str, multi: bool) -> str:
+    """One --save/--load path serves N trainable policies by inserting
+    the policy name before the extension when N > 1."""
+    if not multi:
+        return path
+    root, ext = os.path.splitext(path)
+    return f"{root}.{name}{ext or '.npz'}"
+
+
+def main():
+    ap = build_parser()
+    provided = vars(ap.parse_args())
+    merged = {**DEFAULTS, **provided}
+
+    if merged["list_scenarios"]:
+        for name in scenario_names():
+            sc = get_scenario(name)
+            print(f"{name:18s} {sc.description}")
+            print(f"{'':18s}   env={sc.env} devices={sc.devices} "
+                  f"trace={sc.trace} slo={sc.slo_s}s "
+                  f"seeds={list(sc.seeds)} requests={sc.n_requests} "
+                  f"policies={','.join(sc.policies)}")
+        return
+
+    if merged["scenario"]:
+        try:
+            sc = get_scenario(merged["scenario"])
+        except KeyError as e:
+            ap.error(str(e.args[0]))
+        sc = apply_overrides(sc, provided, merged)
+    else:
+        sc = scenario_from_args(merged)
+    if sc.execute and sc.env != "tpu":
+        ap.error("--execute needs --env tpu (the executable engine "
+                 "serves the transformer stack)")
+
+    if merged["compare"]:
+        names = tuple(merged["compare"].split(","))
+    elif merged["policy"]:
+        names = (merged["policy"],)
+    elif merged["scenario"]:
+        names = sc.policies
+    else:
+        names = ("a2c",)
+    try:
+        specs = [get_policy_spec(n) for n in names]
+    except KeyError as e:
+        ap.error(str(e.args[0]))
+
+    trainable = [s.name for s in specs if s.trainable]
+    if (merged["save_policy"] or merged["load_policy"]) and not trainable:
+        ap.error("--save-policy/--load-policy need a trainable policy "
+                 f"(a2c, ppo) in the roster; got {','.join(names)}")
+    multi = len(trainable) > 1
+    save_map = {n: artifact_path(merged["save_policy"], n, multi)
+                for n in trainable} if merged["save_policy"] else None
+    load_map = {n: artifact_path(merged["load_policy"], n, multi)
+                for n in trainable} if merged["load_policy"] else None
+
+    report = run_scenario(sc, names, save_policies=save_map,
+                          load_policies=load_map, verbose=True)
+
+    cross = next((r.cross_check for r in report.results.values()
+                  if r.cross_check), None)
+    if cross:
         print(f"\nexecute cross-check: {cross['samples']} requests through "
               f"SplitServingEngine; act-bytes exact={cross['bytes_exact']} "
               f"({cross['bytes_mismatches']} mismatches); wall/analytical "
@@ -226,10 +297,13 @@ def main():
               f"max={cross['latency_ratio_max']:.2f} "
               f"(tolerance {cross['latency_tolerance']}x, within="
               f"{cross['latency_within_tolerance']})")
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=2, default=float)
-        print(f"\nwrote {args.json}")
+    if merged["json"]:
+        out = report.to_json()
+        out["config"] = {k: v for k, v in merged.items()
+                         if k not in ("json", "list_scenarios")}
+        with open(merged["json"], "w") as f:
+            json.dump(out, f, indent=2, default=str)
+        print(f"\nwrote {merged['json']}")
 
 
 if __name__ == "__main__":

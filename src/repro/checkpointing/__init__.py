@@ -1,3 +1,6 @@
-from repro.checkpointing.npz import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpointing.npz import (latest_step, load_tree,
+                                     restore_checkpoint, save_checkpoint,
+                                     save_tree)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_tree", "load_tree"]

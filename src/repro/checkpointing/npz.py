@@ -7,12 +7,15 @@ would write per-shard files — noted in DESIGN.md).
 """
 from __future__ import annotations
 
+import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+_META_KEY = "__meta__"
 
 
 def _flatten(tree) -> dict:
@@ -22,6 +25,64 @@ def _flatten(tree) -> dict:
                        for p in path)
         flat[key] = np.asarray(leaf)
     return flat
+
+
+def _restore_into(data, like: Any) -> Any:
+    """Rebuild ``like``'s pytree from a loaded npz mapping, with the
+    structure/shape checks shared by step checkpoints and single-file
+    artifacts. Keys beyond the tree (e.g. ``__meta__``) are ignored only
+    when explicitly reserved."""
+    flat_like = _flatten(like)
+    files = set(data.files) - {_META_KEY}
+    missing = set(flat_like) - files
+    extra = files - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    treedef = leaves_with_path[1]
+    out = []
+    for path_k, leaf in leaves_with_path[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def save_tree(path: str, tree: Any, meta: Optional[Dict] = None) -> str:
+    """Save one pytree as a single-file .npz artifact (atomic rename).
+
+    Unlike ``save_checkpoint`` there is no step numbering — this is the
+    format for reusable artifacts (e.g. a trained controller policy that
+    ``scripts/simulate.py --save-policy`` writes and ``--load-policy``
+    reloads without retraining). ``meta`` is a small JSON-able dict
+    stored alongside the arrays under a reserved key."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    flat = _flatten(tree)
+    if meta is not None:
+        flat[_META_KEY] = np.frombuffer(
+            json.dumps(meta).encode("utf-8"), dtype=np.uint8)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def load_tree(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Load a ``save_tree`` artifact into ``like``'s structure.
+
+    Returns ``(tree, meta)``; restores are structure- and shape-checked
+    against ``like`` so a policy artifact can only load into an agent of
+    the same architecture (same env dims, same net widths)."""
+    data = np.load(path)
+    meta: Dict = {}
+    if _META_KEY in data.files:
+        meta = json.loads(bytes(data[_META_KEY]).decode("utf-8"))
+    return _restore_into(data, like), meta
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
@@ -46,21 +107,4 @@ def latest_step(ckpt_dir: str, name: str = "state") -> Optional[int]:
 def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
                        name: str = "state") -> Any:
     path = os.path.join(ckpt_dir, f"{name}_{step:08d}.npz")
-    data = np.load(path)
-    flat_like = _flatten(like)
-    missing = set(flat_like) - set(data.files)
-    extra = set(data.files) - set(flat_like)
-    if missing or extra:
-        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
-                         f"extra={sorted(extra)[:5]}")
-    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
-    treedef = leaves_with_path[1]
-    out = []
-    for path_k, leaf in leaves_with_path[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_k)
-        arr = data[key]
-        if arr.shape != leaf.shape:
-            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        out.append(arr.astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return _restore_into(np.load(path), like)

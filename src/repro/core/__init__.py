@@ -13,20 +13,21 @@ from repro.core.pricing import (PricingBreakdown, StateView, numpy_tables,
                                 price_actions, view_from_state)
 from repro.core.reward import RewardWeights
 from repro.core.a2c import A2CConfig, train, init_agent, make_train_episode
+from repro.core.ppo import PPOConfig
 from repro.core.profiles import paper_profiles, transformer_profile
 from repro.core.controller import (make_paper_env, make_tpu_env,
-                                   measured_state, resolve_selection,
-                                   train_agent, evaluate_policy, decide,
-                                   agent_policy)
+                                   make_task_sampler, measured_state,
+                                   resolve_selection, train_agent,
+                                   evaluate_policy, decide)
 from repro.core.roofline_env import make_dryrun_tpu_env
 
 __all__ = [
     "OBS_FEATURES", "EnvConfig", "ProfileTables", "build_tables",
     "env_reset", "env_step", "observe", "action_breakdown",
     "PricingBreakdown", "StateView", "price_actions", "view_from_state",
-    "numpy_tables", "RewardWeights", "A2CConfig",
+    "numpy_tables", "RewardWeights", "A2CConfig", "PPOConfig",
     "train", "init_agent", "make_train_episode", "paper_profiles",
     "transformer_profile", "make_paper_env", "make_tpu_env",
-    "measured_state", "resolve_selection", "train_agent",
-    "evaluate_policy", "decide", "agent_policy", "make_dryrun_tpu_env",
+    "make_task_sampler", "measured_state", "resolve_selection",
+    "train_agent", "evaluate_policy", "decide", "make_dryrun_tpu_env",
 ]

@@ -115,8 +115,6 @@ def train(env_cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig,
     training; see controller.train_agent's ``trace`` argument). With
     ``ac.batch_envs = E > 1`` each update consumes E sampled sequences
     (episode indices ep*E .. ep*E+E-1) — per-env domain randomization."""
-    import numpy as np
-
     params = init_agent(env_cfg, tables, ac, rng)
     opt_state = adamw_init(params)
     step = make_train_episode(env_cfg, tables, ac, model_ids=model_ids)
@@ -127,13 +125,9 @@ def train(env_cfg: EnvConfig, tables: ProfileTables, ac: A2CConfig,
         if task_sampler is None:
             params, opt_state, stats = step(params, opt_state, k)
         else:
-            seq = np.stack([np.asarray(task_sampler(ep * E + e),
-                                       dtype=np.float32)
-                            for e in range(E)])
-            if E == 1:
-                seq = seq[0]    # keep the unbatched jit signature stable
-            params, opt_state, stats = step(params, opt_state, k,
-                                            jnp.asarray(seq))
+            params, opt_state, stats = step(
+                params, opt_state, k, net.stack_task_seqs(task_sampler,
+                                                          ep, E))
         history.append({k2: float(v) for k2, v in stats.items()})
         if log_every and (ep + 1) % log_every == 0:
             print(f"ep {ep+1:4d} reward={history[-1]['mean_reward']:+.4f} "

@@ -184,6 +184,22 @@ def run_batched_episodes(env_cfg, tables, rollout, params, rng,
     return state_T, traj, bootstrap
 
 
+def stack_task_seqs(task_sampler, episode, batch_envs):
+    """Sample one update's offered-load sequences from a task_sampler:
+    episode indices ``episode*E .. episode*E+E-1`` (per-env domain
+    randomization), stacked to (E, T, n) — or (T, n) when E == 1, which
+    keeps the unbatched jit signature stable. Shared by the A2C and PPO
+    training loops so the indexing convention cannot diverge."""
+    import numpy as np
+
+    seq = np.stack([np.asarray(task_sampler(episode * batch_envs + e),
+                               dtype=np.float32)
+                    for e in range(batch_envs)])
+    if batch_envs == 1:
+        seq = seq[0]
+    return jnp.asarray(seq)
+
+
 def prepare_task_seq(task_seq, batch_envs):
     """Normalize a task sequence to the batched (E, T, n) layout: a 2-D
     (T, n) sequence (the unbatched API) is shared across all envs."""

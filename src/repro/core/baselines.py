@@ -46,7 +46,8 @@ def random_policy(cfg: EnvConfig, tables: ProfileTables, state, rng):
 
 
 def greedy_oracle(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
-    """Per-step per-UAV reward argmax over all (j, k)."""
+    """Per-step per-UAV reward argmax over all (j, k). Canonical registry
+    name: ``greedy_oracle`` (repro.policies)."""
     n = cfg.n_uavs
     V, K = tables.n_versions, tables.n_cuts
     w = cfg.weights
@@ -66,11 +67,3 @@ def greedy_oracle(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
     scores = jax.vmap(score)(pairs)          # (VK, n)
     best = jnp.argmax(scores, axis=0)        # (n,)
     return pairs[best]
-
-
-POLICIES = {
-    "device_only": device_only,
-    "full_offload": full_offload,
-    "random": random_policy,
-    "greedy_oracle": greedy_oracle,
-}

@@ -10,8 +10,7 @@ Wires profiles -> env -> A2C and exposes:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,6 +97,31 @@ def resolve_selection(model_cfg, profile, j: int, k: int):
     return v.version, partition.cut_for_layer(model_cfg, layer)
 
 
+def make_task_sampler(cfg: EnvConfig, trace, seed: int):
+    """Adapt a workload trace (repro.sim.traces.Trace) into the
+    ``task_sampler(episode) -> (episode_len, n_uavs)`` hook the batched
+    trainers consume: per-slot offered load counts / (slot * peak_rps),
+    the same normalization the fleet simulator feeds ``measured_state``,
+    so the agent learns what bursts look like before it meets them
+    online. Shared by the A2C and PPO training paths; requires
+    cfg.peak_rps > 0 to normalize counts into the load feature."""
+    if trace is None:
+        return None
+    if cfg.peak_rps <= 0:
+        raise ValueError("trace-driven training needs cfg.peak_rps > 0 "
+                         "to normalize counts into the load feature")
+
+    def task_sampler(episode):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, episode]))
+        gen = trace.stream(rng, cfg.n_uavs, cfg.slot_seconds)
+        rows = [next(gen) for _ in range(cfg.episode_len)]
+        return np.clip(np.asarray(rows, dtype=np.float32)
+                       / (cfg.slot_seconds * cfg.peak_rps), 0.0, 1.0)
+
+    return task_sampler
+
+
 def train_agent(cfg: EnvConfig, tables: ProfileTables,
                 ac: A2C.A2CConfig = A2C.A2CConfig(), seed: int = 0,
                 log_every: int = 0, trace=None):
@@ -105,30 +129,14 @@ def train_agent(cfg: EnvConfig, tables: ProfileTables,
     env instances per update inside one jit (each with its own reset
     draw and, under a trace, its own sampled load sequence) — the same
     wall-clock per update buys E× the episodes and scenario diversity.
-    ``trace`` (a repro.sim.traces.Trace)
-    switches the episode's task feature from the Bernoulli draw to
-    trace-driven offered load — counts / (slot * peak_rps), the same
-    normalization the fleet simulator feeds ``measured_state`` — so the
-    agent learns what bursts look like before it meets them online.
-    Requires cfg.peak_rps > 0. For battery-drain parity with the
-    per-request fleet metering, set cfg.frames_per_slot =
-    slot_seconds * peak_rps (one frame per request at saturation)."""
-    task_sampler = None
-    if trace is not None:
-        if cfg.peak_rps <= 0:
-            raise ValueError("trace-driven training needs cfg.peak_rps > 0 "
-                             "to normalize counts into the load feature")
-
-        def task_sampler(episode):
-            rng = np.random.default_rng(
-                np.random.SeedSequence([seed, episode]))
-            gen = trace.stream(rng, cfg.n_uavs, cfg.slot_seconds)
-            rows = [next(gen) for _ in range(cfg.episode_len)]
-            return np.clip(np.asarray(rows, dtype=np.float32)
-                           / (cfg.slot_seconds * cfg.peak_rps), 0.0, 1.0)
-
+    ``trace`` (a repro.sim.traces.Trace) switches the episode's task
+    feature from the Bernoulli draw to trace-driven offered load — see
+    ``make_task_sampler``. For battery-drain parity with the per-request
+    fleet metering, set cfg.frames_per_slot = slot_seconds * peak_rps
+    (one frame per request at saturation)."""
     return A2C.train(cfg, tables, ac, jax.random.key(seed),
-                     log_every=log_every, task_sampler=task_sampler)
+                     log_every=log_every,
+                     task_sampler=make_task_sampler(cfg, trace, seed))
 
 
 def decide(params, cfg: EnvConfig, tables: ProfileTables, state):
@@ -168,16 +176,12 @@ def measured_state(cfg: EnvConfig, tables: ProfileTables, *,
     }
 
 
-def agent_policy(params):
-    def policy(cfg, tables, state, rng=None):
-        return decide(params, cfg, tables, state)
-    return policy
-
-
 def evaluate_policy(cfg: EnvConfig, tables: ProfileTables,
-                    policy: Callable, rng, episodes: int = 5) -> Dict:
-    """Roll a policy; aggregate the paper's reported metrics + the
-    (version, cut) selection histogram (Table II reproduction).
+                    policy, rng, episodes: int = 5) -> Dict:
+    """Roll a policy (a ``repro.policies.Policy`` — anything exposing
+    ``act(state, rng) -> (n, 2) int32`` built against this env); aggregate
+    the paper's reported metrics + the (version, cut) selection histogram
+    (Table II reproduction).
 
     Each episode is one jitted lax.scan over the slots — no host
     round-trip per slot — with the selection histogram built by a
@@ -185,6 +189,11 @@ def evaluate_policy(cfg: EnvConfig, tables: ProfileTables,
     rng threading (split per episode, split per slot, policy/env
     fold-ins) matches the historical per-slot Python loop, so fixed-seed
     results are unchanged up to float summation order."""
+    if policy.env_cfg is not cfg or policy.tables is not tables:
+        raise ValueError(
+            f"policy {policy.name!r} was built against a different "
+            "(env_cfg, tables) world than the one being evaluated; "
+            "build it from the same objects")
     M, V, K = tables.n_models, tables.n_versions, tables.n_cuts
 
     @jax.jit
@@ -195,7 +204,7 @@ def evaluate_policy(cfg: EnvConfig, tables: ProfileTables,
         def step(carry, _):
             state, rng = carry
             rng, k = jax.random.split(rng)
-            actions = policy(cfg, tables, state, jax.random.fold_in(k, 7))
+            actions = policy.act(state, jax.random.fold_in(k, 7))
             state2, r, info = env_step(cfg, tables, state, actions,
                                        jax.random.fold_in(k, 13))
             out = {

@@ -92,14 +92,25 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
 
 
 def train(env_cfg: EnvConfig, tables: ProfileTables, pc: PPOConfig, rng,
-          model_ids=None, log_every: int = 0):
+          model_ids=None, log_every: int = 0, task_sampler=None):
+    """``task_sampler(episode) -> (episode_len, n_uavs)`` offered-load
+    sequences enable trace-driven training exactly like A2C.train (with
+    ``pc.batch_envs = E > 1`` each update consumes E sampled sequences —
+    per-env domain randomization; the episode-indexing convention lives
+    once in ``actor_critic.stack_task_seqs``)."""
     params = init_agent(env_cfg, tables, pc.base, rng)
     opt_state = adamw_init(params)
     step = make_train_episode(env_cfg, tables, pc, model_ids=model_ids)
+    E = max(int(pc.batch_envs), 1)
     history = []
     for ep in range(pc.episodes):
         rng, k = jax.random.split(rng)
-        params, opt_state, stats = step(params, opt_state, k)
+        if task_sampler is None:
+            params, opt_state, stats = step(params, opt_state, k)
+        else:
+            params, opt_state, stats = step(
+                params, opt_state, k, net.stack_task_seqs(task_sampler,
+                                                          ep, E))
         history.append({k2: float(v) for k2, v in stats.items()})
         if log_every and (ep + 1) % log_every == 0:
             print(f"ppo ep {ep+1:4d} "

@@ -1,0 +1,21 @@
+"""repro.policies: one Policy protocol + canonical name registry.
+
+Importing this package registers the full roster:
+
+- static:    ``device_only``, ``full_offload``, ``random``,
+             ``greedy_oracle``
+- trainable: ``a2c`` (the paper's controller), ``ppo`` (ablation)
+
+``build_policy(name, env_cfg, tables, **kw)`` is the one entry point;
+unknown names raise a KeyError listing every valid name.
+"""
+from repro.policies.base import (Policy, PolicySpec, build_policy,
+                                 get_policy_spec, policy_names, register)
+from repro.policies.static import StaticPolicy
+from repro.policies.trainable import A2CPolicy, PPOPolicy, TrainablePolicy
+
+__all__ = [
+    "Policy", "PolicySpec", "StaticPolicy", "TrainablePolicy",
+    "A2CPolicy", "PPOPolicy",
+    "register", "build_policy", "get_policy_spec", "policy_names",
+]

@@ -1,0 +1,125 @@
+"""Trainable policies (A2C — the paper's algorithm — and the PPO
+ablation) behind the Policy protocol.
+
+Lifecycle: ``build`` (untrained nets bound to one env) → ``train(seed,
+trace)`` (batched vmapped-env updates; a workload trace switches the
+task feature to trace-driven offered load) → ``save``/``load`` (one-file
+.npz artifacts via ``repro.checkpointing``, structure-checked on
+restore) → greedy ``act``. A trained controller is therefore a reusable
+artifact: ``scripts/simulate.py --save-policy`` / ``--load-policy``
+round-trips it without retraining, reproducing bit-identical actions.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpointing import load_tree, save_tree
+from repro.core import a2c as A2C
+from repro.core import ppo as PPO
+from repro.core.actor_critic import greedy_actions, init_agent
+from repro.core.controller import make_task_sampler
+from repro.core.env import observe
+from repro.policies.base import Policy, PolicySpec, register
+
+_ARTIFACT_SCHEMA = 1
+
+
+class TrainablePolicy(Policy):
+    trainable = True
+
+    def __init__(self, env_cfg, tables, config):
+        super().__init__(env_cfg, tables)
+        self.config = config
+        self.params = None
+        self.history = None
+
+    # -- subclass hooks ----------------------------------------------------
+    def _init_params(self, rng):
+        raise NotImplementedError
+
+    def _train(self, seed, trace, log_every):
+        raise NotImplementedError
+
+    # -- lifecycle ---------------------------------------------------------
+    def train(self, seed: int = 0, trace=None, log_every: int = 0):
+        """Train from scratch; returns the per-episode stats history."""
+        self.params, self.history = self._train(seed, trace, log_every)
+        return self.history
+
+    def act(self, state, rng=None):
+        if self.params is None:
+            raise RuntimeError(f"policy {self.name!r}: call train() or "
+                               "load() before act()")
+        obs = observe(self.env_cfg, self.tables, state).reshape(-1)
+        valid = self.tables.version_valid[state["model_id"]]
+        return greedy_actions(self.params, obs, valid)
+
+    def _cache_token(self):
+        return self.params
+
+    def save(self, path: str) -> str:
+        if self.params is None:
+            raise RuntimeError(f"policy {self.name!r}: nothing to save "
+                               "before train() or load()")
+        return save_tree(path, self.params,
+                         meta={"schema": _ARTIFACT_SCHEMA,
+                               "policy": self.name})
+
+    def load(self, path: str) -> "TrainablePolicy":
+        """Restore a ``save``d artifact. The template params (same env
+        dims, same net widths) structure-check the restore, so loading a
+        controller trained for a different fleet fails loudly."""
+        template = self.params if self.params is not None \
+            else self._init_params(jax.random.key(0))
+        params, meta = load_tree(path, template)
+        saved_as = meta.get("policy")
+        if saved_as is not None and saved_as != self.name:
+            raise ValueError(f"artifact {path!r} holds a {saved_as!r} "
+                             f"policy, not {self.name!r}")
+        self.params = params
+        return self
+
+
+class A2CPolicy(TrainablePolicy):
+    """The paper's controller (Sec. II-C/D)."""
+
+    name = "a2c"        # artifacts stay loadable from direct construction
+
+    def __init__(self, env_cfg, tables, **cfg_kw):
+        super().__init__(env_cfg, tables, A2C.A2CConfig(**cfg_kw))
+
+    def _init_params(self, rng):
+        return init_agent(self.env_cfg, self.tables, self.config, rng)
+
+    def _train(self, seed, trace, log_every):
+        return A2C.train(self.env_cfg, self.tables, self.config,
+                         jax.random.key(seed), log_every=log_every,
+                         task_sampler=make_task_sampler(self.env_cfg, trace,
+                                                        seed))
+
+
+class PPOPolicy(TrainablePolicy):
+    """Beyond-paper ablation: clipped-surrogate PPO on the same nets."""
+
+    name = "ppo"
+
+    def __init__(self, env_cfg, tables, **cfg_kw):
+        super().__init__(env_cfg, tables, PPO.PPOConfig(**cfg_kw))
+
+    def _init_params(self, rng):
+        return init_agent(self.env_cfg, self.tables, self.config.base, rng)
+
+    def _train(self, seed, trace, log_every):
+        return PPO.train(self.env_cfg, self.tables, self.config,
+                         jax.random.key(seed), log_every=log_every,
+                         task_sampler=make_task_sampler(self.env_cfg, trace,
+                                                        seed))
+
+
+register(PolicySpec(
+    "a2c", A2CPolicy, trainable=True,
+    description="A2C controller (the paper's algorithm); kwargs -> "
+                "A2CConfig (episodes, entropy_coef, batch_envs, ...)"))
+register(PolicySpec(
+    "ppo", PPOPolicy, trainable=True,
+    description="PPO ablation on the shared nets; kwargs -> PPOConfig"))

@@ -1,0 +1,17 @@
+"""repro.scenarios: declarative experiment regimes + the one entry point.
+
+A ``Scenario`` names a complete operating regime (env kind, fleet shape,
+reward weights, workload trace, SLO, seeds, training budget); importing
+this package registers the presets (``scenario_names()`` lists them) and
+``run_scenario(scenario, policies)`` runs any policy roster against one
+with paired-seed comparisons built in.
+"""
+from repro.scenarios.base import Scenario
+from repro.scenarios.presets import (get_scenario, register_scenario,
+                                     scenario_names)
+from repro.scenarios.run import ComparisonReport, PolicyResult, run_scenario
+
+__all__ = [
+    "Scenario", "ComparisonReport", "PolicyResult",
+    "get_scenario", "register_scenario", "scenario_names", "run_scenario",
+]

@@ -1,0 +1,144 @@
+"""The declarative Scenario: one dataclass describing an experiment's
+whole operating regime — env kind + fleet shape, reward weighting,
+workload trace, SLO, training budget and evaluation seeds — so every
+consumer (CLI, examples, benchmarks, tests) enumerates requirements
+instead of re-plumbing build_trace/build_env/build_policy by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import make_paper_env, make_tpu_env, transformer_profile
+from repro.core.latency import LatencyParams
+from repro.core.reward import RewardWeights
+from repro.sim import AnalyticalBackend, ExecuteBackend, get_trace
+from repro.sim.traces import Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, fully-specified operating regime.
+
+    ``build_env()``/``build_trace()``/``build_train_trace()`` turn the
+    declaration into live objects; ``run_scenario`` (repro.scenarios.run)
+    is the single entry point that consumes them. ``replace(**kw)``
+    derives variants (CLI flags override preset fields through it).
+    """
+    name: str
+    description: str = ""
+
+    # --- world -----------------------------------------------------------
+    env: str = "paper"                   # "paper" | "tpu"
+    devices: int = 4
+    arch: str = "qwen2-0.5b"             # tpu env: assigned transformer
+    models: str = "cycle"                # paper env fleet composition
+    weights: RewardWeights = dataclasses.field(
+        default_factory=lambda: RewardWeights(w_acc=0.05, w_lat=0.10,
+                                              w_energy=0.15, w_stab=0.70))
+    slot_seconds: float = 10.0
+    peak_rps: float = 30.0               # 0 -> paper-faithful reward
+    # paper-env fleet provisioning; None keeps LatencyParams defaults
+    # (the paper's 3-UAV testbed numbers)
+    server_flops_per_device: Optional[float] = 0.55e12
+    bw_max_bps: Optional[float] = 1e9
+    bw_min_bps: Optional[float] = None
+
+    # --- workload ---------------------------------------------------------
+    trace: str = "mmpp"
+    trace_kw: Dict = dataclasses.field(default_factory=dict)
+
+    # --- evaluation -------------------------------------------------------
+    slo_s: float = 2.0
+    seeds: Tuple[int, ...] = (0, 1, 2)   # paired across policies
+    n_requests: int = 20_000
+    policies: Tuple[str, ...] = ("a2c", "device_only", "full_offload")
+
+    # --- training budget (trainable policies) -----------------------------
+    episodes: int = 300
+    entropy_coef: float = 0.03
+    batch_envs: int = 1
+    train_seed: int = 0
+    train_trace: Optional[str] = "uniform"   # domain randomization
+    train_trace_kw: Dict = dataclasses.field(default_factory=dict)
+
+    # --- execute cross-check (tpu env) -------------------------------------
+    execute: bool = False
+    sample: int = 16
+    exec_seq: int = 32
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    # -- builders ----------------------------------------------------------
+    def build_trace(self) -> Trace:
+        return get_trace(self.trace, **self.trace_kw)
+
+    def build_train_trace(self) -> Optional[Trace]:
+        """The load process trainable policies see; None under the
+        paper-faithful reward (peak_rps == 0 -> Bernoulli task draws)."""
+        if self.train_trace is None or self.peak_rps <= 0:
+            return None
+        kw = dict(self.train_trace_kw)
+        if self.train_trace == "uniform" and not kw:
+            kw = {"max_rps": self.peak_rps}   # cover the whole load range
+        return get_trace(self.train_trace, **kw)
+
+    def build_env(self):
+        """Returns (env_cfg, tables, model_ids, backend_factory) — the
+        same quadruple scripts/simulate.py historically hand-built."""
+        if self.env == "tpu":
+            return self._build_tpu_env()
+        if self.execute:
+            raise ValueError("execute=True needs env='tpu' (the "
+                             "executable engine serves the transformer "
+                             "stack)")
+        lat_kw = {}
+        if self.server_flops_per_device is not None:
+            lat_kw["server_flops"] = self.server_flops_per_device \
+                * self.devices
+        if self.bw_max_bps is not None:
+            lat_kw["bw_max_bps"] = self.bw_max_bps
+        if self.bw_min_bps is not None:
+            lat_kw["bw_min_bps"] = self.bw_min_bps
+        env_cfg, tables = make_paper_env(
+            weights=self.weights, n_uavs=self.devices,
+            latency=LatencyParams(**lat_kw),
+            slot_seconds=self.slot_seconds, peak_rps=self.peak_rps,
+            # one frame per request at saturation: env battery drain per
+            # slot equals the fleet's per-request metering
+            frames_per_slot=self.slot_seconds * max(self.peak_rps, 1.0))
+        if self.models == "cycle":
+            model_ids = np.arange(self.devices,
+                                  dtype=np.int32) % tables.n_models
+        else:
+            model_ids = np.full(self.devices,
+                                tables.names.index(self.models), np.int32)
+        return env_cfg, tables, model_ids, \
+            lambda: AnalyticalBackend(env_cfg, tables)
+
+    def _build_tpu_env(self):
+        import jax
+
+        from repro.configs import get_config
+
+        archs = [self.arch] * self.devices
+        env_cfg, tables = make_tpu_env(
+            archs, weights=self.weights, reduced=True,
+            seq_len=self.exec_seq, slot_seconds=self.slot_seconds,
+            peak_rps=self.peak_rps)
+        model_ids = np.zeros(self.devices, np.int32)
+
+        def backend_factory():
+            if not self.execute:
+                return AnalyticalBackend(env_cfg, tables)
+            from repro.models import init
+
+            cfg = get_config(self.arch).reduced()
+            prof = transformer_profile(cfg, seq_len=self.exec_seq)
+            params = init(cfg, jax.random.key(0))
+            return ExecuteBackend(env_cfg, tables, [cfg], [prof], [params],
+                                  seq_len=self.exec_seq, sample=self.sample)
+        return env_cfg, tables, model_ids, backend_factory

@@ -1,0 +1,113 @@
+"""Named scenario presets + registry.
+
+Each preset is a complete operating regime; ``scripts/simulate.py
+--scenario <name>`` (flags still override individual fields) and
+``run_scenario`` consume them, and the scenario-determinism test runs
+every one of them twice. Registering a new requirement is one
+``register_scenario`` call — no call-site plumbing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.core.reward import RewardWeights
+from repro.scenarios.base import Scenario
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    if scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def scenario_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; valid names: "
+                       f"{', '.join(scenario_names())}")
+    return _REGISTRY[name]
+
+
+# --------------------------------------------------------------------------
+# presets
+# --------------------------------------------------------------------------
+
+register_scenario(Scenario(
+    name="paper-exact",
+    description="the paper's 3-UAV testbed, faithful reward (no "
+                "stability term), 30 s slots, ~1 fps reconnaissance "
+                "load per device",
+    devices=3, models="cycle",
+    weights=RewardWeights(),                 # thirds, w_stab = 0
+    slot_seconds=30.0, peak_rps=0.0,         # paper-faithful
+    server_flops_per_device=None, bw_max_bps=None,   # testbed latency
+    trace="poisson", trace_kw={"rate_rps": 1.0},
+    slo_s=5.0, seeds=(0, 1, 2), n_requests=10_000,
+    policies=("a2c", "greedy_oracle", "device_only", "full_offload"),
+    episodes=300, entropy_coef=0.01, train_trace=None))
+
+register_scenario(Scenario(
+    name="paper-mmpp-burst",
+    description="4-device fleet under 2-state MMPP bursts (2 -> 30 "
+                "rps/device); the stability-aware controller's "
+                "acceptance regime",
+    devices=4, models="vgg",
+    trace="mmpp", trace_kw={"rate_low_rps": 2.0, "rate_high_rps": 30.0},
+    slot_seconds=10.0, peak_rps=30.0, slo_s=2.0,
+    seeds=(0, 2, 4), n_requests=20_000,
+    policies=("a2c", "device_only", "full_offload"),
+    episodes=500))
+
+register_scenario(Scenario(
+    name="diurnal-fleet",
+    description="8-device fleet under a sinusoidal day/night load "
+                "(2 -> 30 rps/device) with mixed model assignment",
+    devices=8, models="cycle",
+    trace="diurnal", trace_kw={"base_rps": 2.0, "peak_rps": 30.0},
+    slot_seconds=10.0, peak_rps=30.0, slo_s=2.0,
+    seeds=(0, 1, 2), n_requests=50_000,
+    policies=("a2c", "device_only", "full_offload"),
+    episodes=300))
+
+register_scenario(Scenario(
+    name="degraded-link",
+    description="uplink collapse: WiFi ceiling cut to 64 Mb/s (floor "
+                "4 Mb/s) under MMPP bursts — offloading must be "
+                "re-earned per decision",
+    devices=4, models="cycle",
+    bw_max_bps=64e6, bw_min_bps=4e6,
+    trace="mmpp", trace_kw={"rate_low_rps": 2.0, "rate_high_rps": 20.0},
+    slot_seconds=10.0, peak_rps=20.0, slo_s=2.0,
+    seeds=(0, 1, 2), n_requests=20_000,
+    policies=("a2c", "device_only", "full_offload"),
+    episodes=400))
+
+register_scenario(Scenario(
+    name="tpu-submesh",
+    description="TPU adaptation: 2 head submeshes serving reduced "
+                "qwen2-0.5b, version axis = {bf16, w8, w4}, ICI uplink, "
+                "analytical pricing",
+    env="tpu", devices=2, arch="qwen2-0.5b",
+    trace="poisson", trace_kw={"rate_rps": 100.0},
+    slot_seconds=1.0, peak_rps=200.0, slo_s=0.05,
+    seeds=(0, 1), n_requests=20_000,
+    policies=("greedy_oracle", "device_only", "full_offload"),
+    episodes=200))
+
+register_scenario(Scenario(
+    name="tpu-execute",
+    description="tpu-submesh plus the execute cross-check: a sampled "
+                "subset of requests runs through the real "
+                "SplitServingEngine (act-bytes must match exactly)",
+    env="tpu", devices=2, arch="qwen2-0.5b",
+    trace="poisson", trace_kw={"rate_rps": 100.0},
+    slot_seconds=1.0, peak_rps=200.0, slo_s=0.05,
+    seeds=(0,), n_requests=2_000,
+    policies=("greedy_oracle",),
+    episodes=200, execute=True, sample=8))

@@ -1,0 +1,163 @@
+"""``run_scenario``: the single experiment entry point.
+
+Builds the scenario's world once, resolves every requested policy
+through the canonical registry (training — or loading a saved artifact —
+where the spec is trainable), and simulates each policy over the *same*
+seeds, so comparisons are paired by construction: two policies under one
+seed face the identical request stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.policies import get_policy_spec
+from repro.scenarios.base import Scenario
+from repro.sim import FleetConfig, simulate
+
+_TABLE_HEADER = (f"{'policy':14s} {'requests':>9s} {'p50_s':>8s} "
+                 f"{'p95_s':>8s} {'p99_s':>8s} {'slo_att':>8s} "
+                 f"{'goodput':>8s} {'E/req_J':>8s} {'drop':>6s}")
+
+
+@dataclasses.dataclass
+class PolicyResult:
+    """One policy's paired-seed outcome inside a ComparisonReport."""
+    name: str
+    mean: Dict[str, float]
+    per_seed: List[Dict]
+    trained: bool = False
+    loaded_from: Optional[str] = None
+    saved_to: Optional[str] = None
+    cross_check: Optional[Dict] = None
+
+    def row(self) -> str:
+        m = self.mean
+        return (f"{self.name:14s} {m['count']:9.0f} {m['p50']:8.3f} "
+                f"{m['p95']:8.2f} {m['p99']:8.2f} "
+                f"{m['slo_attainment']:8.3f} {m['goodput']:8.1f} "
+                f"{m['energy_per_request_j']:8.3f} {m['dropped']:6.0f}")
+
+
+@dataclasses.dataclass
+class ComparisonReport:
+    """Paired-seed comparison of N policies under one scenario."""
+    scenario: str
+    seeds: Tuple[int, ...]
+    n_requests: int
+    trace: str
+    results: Dict[str, PolicyResult]     # insertion-ordered
+
+    def table(self) -> str:
+        return "\n".join([_TABLE_HEADER]
+                         + [r.row() for r in self.results.values()])
+
+    def to_json(self) -> Dict:
+        out = {"scenario": self.scenario, "seeds": list(self.seeds),
+               "n_requests": self.n_requests, "trace": self.trace,
+               "policies": {}}
+        for name, r in self.results.items():
+            entry = {"mean": r.mean, "per_seed": r.per_seed,
+                     "trained": r.trained}
+            if r.loaded_from:
+                entry["loaded_from"] = r.loaded_from
+            if r.saved_to:
+                entry["saved_to"] = r.saved_to
+            if r.cross_check:
+                entry["cross_check"] = {k: v for k, v in
+                                        r.cross_check.items()
+                                        if k != "records"}
+            out["policies"][name] = entry
+        return out
+
+
+def run_scenario(scenario: Scenario,
+                 policies: Optional[Sequence[str]] = None, *,
+                 n_requests: Optional[int] = None,
+                 seeds: Optional[Sequence[int]] = None,
+                 episodes: Optional[int] = None,
+                 load_policies: Optional[Mapping[str, str]] = None,
+                 save_policies: Optional[Mapping[str, str]] = None,
+                 verbose: bool = False) -> ComparisonReport:
+    """Run ``policies`` (default: the scenario's own roster) through the
+    scenario; returns a paired-seed ComparisonReport.
+
+    ``load_policies``/``save_policies`` map policy name -> artifact path:
+    a mapped trainable policy loads instead of training (identical
+    paired-seed metrics to the run that saved it, no retraining), and
+    saves right after training. ``n_requests``/``seeds``/``episodes``
+    override the scenario without mutating it.
+    """
+    names = tuple(policies) if policies else scenario.policies
+    specs = [get_policy_spec(n) for n in names]   # fail fast on bad names
+    seeds = tuple(seeds) if seeds is not None else scenario.seeds
+    n_req = int(n_requests) if n_requests is not None \
+        else scenario.n_requests
+    eps = int(episodes) if episodes is not None else scenario.episodes
+
+    env_cfg, tables, model_ids, backend_factory = scenario.build_env()
+    trace = scenario.build_trace()
+    fleet = FleetConfig(slo_s=scenario.slo_s)
+
+    if verbose:
+        print(f"scenario {scenario.name}: {scenario.devices} devices "
+              f"({scenario.env} env), trace={trace.name} "
+              f"(mean {trace.mean_rps:.1f} rps/device), "
+              f"slo={scenario.slo_s}s, requests={n_req} x seeds "
+              f"{list(seeds)}")
+
+    results: Dict[str, PolicyResult] = {}
+    header_printed = False
+    for spec in specs:
+        kw = {}
+        if spec.trainable:
+            kw = dict(episodes=eps, entropy_coef=scenario.entropy_coef,
+                      batch_envs=scenario.batch_envs)
+        policy = spec.build(env_cfg, tables, **kw)
+        trained, loaded_from, saved_to = False, None, None
+        if spec.trainable:
+            loaded_from = (load_policies or {}).get(spec.name)
+            if loaded_from:
+                policy.load(loaded_from)
+                if verbose:
+                    print(f"{spec.name}: loaded artifact {loaded_from}")
+            else:
+                if verbose:
+                    print(f"{spec.name}: training ({eps} episodes) ...",
+                          flush=True)
+                hist = policy.train(seed=scenario.train_seed,
+                                    trace=scenario.build_train_trace())
+                trained = True
+                if verbose:
+                    last = np.mean([h["mean_reward"] for h in hist[-15:]])
+                    print(f"  trained: mean reward (last 15 episodes) = "
+                          f"{last:+.3f}")
+            saved_to = (save_policies or {}).get(spec.name)
+            if saved_to:
+                policy.save(saved_to)
+                if verbose:
+                    print(f"{spec.name}: saved artifact {saved_to}")
+
+        per_seed, cross = [], None
+        for seed in seeds:
+            res = simulate(env_cfg, tables, policy, trace,
+                           n_requests=n_req, seed=seed, fleet=fleet,
+                           backend=backend_factory(), model_ids=model_ids)
+            per_seed.append(res.summary)
+            cross = res.cross_check or cross
+        mean = {k: float(np.mean([s[k] for s in per_seed]))
+                for k in per_seed[0] if k != "unit"}
+        results[spec.name] = PolicyResult(
+            name=spec.name, mean=mean, per_seed=per_seed, trained=trained,
+            loaded_from=loaded_from, saved_to=saved_to, cross_check=cross)
+        if verbose:
+            if not header_printed:
+                print("\n" + _TABLE_HEADER)
+                header_printed = True
+            print(results[spec.name].row())
+
+    return ComparisonReport(scenario=scenario.name, seeds=seeds,
+                            n_requests=n_req, trace=trace.name,
+                            results=results)

@@ -23,7 +23,7 @@ bursts (MMPP) really queue instead of averaging away.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -71,36 +71,18 @@ class SimResult:
         return out
 
 
-# jit cache keyed by identity: repeated simulate() calls with the same
-# (policy, cfg, tables) objects — warm-up + timed benchmark runs, or one
-# policy over several seeds — must reuse one compiled decision step
-# instead of re-tracing per call
-_POLICY_JIT_CACHE: Dict = {}
-
-
-def _jitted_policy(policy, cfg, tables):
-    import jax
-
-    key = (id(policy), id(cfg), id(tables))
-    if key not in _POLICY_JIT_CACHE:
-        while len(_POLICY_JIT_CACHE) >= 32:   # bound pinned closures
-            _POLICY_JIT_CACHE.pop(next(iter(_POLICY_JIT_CACHE)))
-        _POLICY_JIT_CACHE[key] = (
-            jax.jit(lambda state, k: policy(cfg, tables, state, k)),
-            policy, cfg, tables)   # pin refs so ids stay valid
-    return _POLICY_JIT_CACHE[key][0]
-
-
-def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy: Callable,
+def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
              trace: Trace, *, n_requests: int = 100_000, seed: int = 0,
              fleet: FleetConfig = FleetConfig(),
              backend: Optional[AnalyticalBackend] = None,
              model_ids: Optional[Sequence[int]] = None) -> SimResult:
     """Run the fleet until ``n_requests`` have arrived (or max_epochs).
 
-    ``policy`` has the baseline/controller signature
-    ``(env_cfg, tables, state, rng) -> (n, 2) int32`` — baselines from
-    ``core.baselines`` and ``agent_policy(params)`` both fit.
+    ``policy`` is a ``repro.policies.Policy`` built against this same
+    (env_cfg, tables) world — ``act(state, rng) -> (n, 2) int32``; its
+    jitted decide step is cached on the instance, so repeated simulate()
+    calls with one policy object (seed sweeps, warm + timed benchmark
+    runs) compile once.
 
     The trace and the world dynamics draw from independent generators
     spawned off one seed, and the draw order is policy-independent, so
@@ -111,6 +93,12 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy: Callable,
 
     from repro.core.controller import measured_state
 
+    if policy.env_cfg is not env_cfg or policy.tables is not tables:
+        raise ValueError(
+            f"policy {policy.name!r} was built against a different "
+            "(env_cfg, tables) world than this simulation — its decisions "
+            "would silently score under the wrong physics; build it from "
+            "the same objects (run_scenario does this for you)")
     cfg = env_cfg
     n = cfg.n_uavs
     lp, pw = cfg.latency, cfg.power
@@ -142,7 +130,7 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy: Callable,
         cfg.peak_rps if cfg.peak_rps > 0 else max(2.0 * trace.mean_rps,
                                                   1e-9))
 
-    pol = _jitted_policy(policy, cfg, tables)
+    pol = policy.jitted()
     stream = trace.stream(t_rng, n, cfg.slot_seconds)
     metrics = FleetMetrics(slo_s=fleet.slo_s)
     hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts))

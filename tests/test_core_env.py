@@ -12,7 +12,7 @@ from repro.core import (A2CConfig, EnvConfig, RewardWeights, env_reset,
                         env_step, make_paper_env, make_tpu_env, observe,
                         paper_profiles)
 from repro.core import reward as rw
-from repro.core.baselines import POLICIES
+from repro.policies import build_policy
 from repro.core.env import action_costs, build_tables
 from repro.core.profiles import transformer_profile
 from repro.configs import get_config
@@ -140,9 +140,10 @@ def test_cut_monotonicity(paper_env):
 def test_greedy_beats_random(paper_env):
     from repro.core import evaluate_policy
     cfg, tables = paper_env
-    g = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+    g = evaluate_policy(cfg, tables,
+                        build_policy("greedy_oracle", cfg, tables),
                         jax.random.key(3), episodes=1)
-    r = evaluate_policy(cfg, tables, POLICIES["random"],
+    r = evaluate_policy(cfg, tables, build_policy("random", cfg, tables),
                         jax.random.key(3), episodes=1)
     assert g["reward"] > r["reward"]
 

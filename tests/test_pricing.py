@@ -13,7 +13,8 @@ from repro.core import (A2CConfig, evaluate_policy, init_agent,
                         make_paper_env, make_train_episode, make_tpu_env,
                         env_reset, env_step)
 from repro.core import pricing
-from repro.core.baselines import POLICIES, random_policy
+from repro.core.baselines import random_policy
+from repro.policies import build_policy
 from repro.core.env import action_breakdown, build_tables
 from repro.core.profiles import paper_profiles, transformer_profile
 from repro.optim import adamw_init
@@ -145,7 +146,7 @@ def _reference_evaluate(cfg, tables, policy, rng, episodes):
         state = env_reset(cfg, tables, k0)
         for t in range(cfg.episode_len):
             rng, k = jax.random.split(rng)
-            actions = policy(cfg, tables, state, jax.random.fold_in(k, 7))
+            actions = policy.act(state, jax.random.fold_in(k, 7))
             state, r, info = env_step(cfg, tables, state, actions,
                                       jax.random.fold_in(k, 13))
             a_np = np.asarray(actions)
@@ -172,9 +173,10 @@ def test_evaluate_policy_matches_reference_loop():
     reproduce the per-slot loop's metrics (float-sum tolerance) and its
     selection histogram exactly."""
     cfg, tables = make_paper_env(episode_len=20)
-    got = evaluate_policy(cfg, tables, POLICIES["random"],
+    rand = build_policy("random", cfg, tables)
+    got = evaluate_policy(cfg, tables, rand,
                           jax.random.key(5), episodes=2)
-    want = _reference_evaluate(cfg, tables, POLICIES["random"],
+    want = _reference_evaluate(cfg, tables, rand,
                                jax.random.key(5), episodes=2)
     np.testing.assert_array_equal(got["selection_hist"],
                                   want["selection_hist"])
@@ -186,9 +188,10 @@ def test_evaluate_policy_matches_reference_loop():
 
 def test_evaluate_policy_deterministic():
     cfg, tables = make_paper_env(episode_len=16)
-    a = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+    oracle = build_policy("greedy_oracle", cfg, tables)
+    a = evaluate_policy(cfg, tables, oracle,
                         jax.random.key(1), episodes=2)
-    b = evaluate_policy(cfg, tables, POLICIES["greedy_oracle"],
+    b = evaluate_policy(cfg, tables, oracle,
                         jax.random.key(1), episodes=2)
     assert a["reward"] == b["reward"]
     np.testing.assert_array_equal(a["selection_hist"], b["selection_hist"])

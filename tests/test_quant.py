@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import (evaluate_policy, make_tpu_env, resolve_selection,
                         transformer_profile)
-from repro.core.baselines import POLICIES
+from repro.policies import build_policy
 from repro.core.partition import cut_for_layer, cut_points
 from repro.kernels.quant_matmul import quant_matmul, quant_matmul_ref
 from repro.models import forward_logits, init
@@ -274,7 +274,8 @@ def test_tpu_env_modal_selection_executes_quantized():
     env_cfg, tables = make_tpu_env([arch], reduced=True, episode_len=16)
     assert tables.n_versions == len(DEFAULT_VERSIONS)
     assert float(jnp.min(tables.tail_weight_bytes)) >= 0.0
-    m = evaluate_policy(env_cfg, tables, POLICIES["greedy_oracle"],
+    m = evaluate_policy(env_cfg, tables,
+                        build_policy("greedy_oracle", env_cfg, tables),
                         jax.random.key(0), episodes=1)
     assert np.isfinite(m["reward"])
     j, k = m["modal_selection"][arch]

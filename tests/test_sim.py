@@ -7,11 +7,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (A2CConfig, RewardWeights, agent_policy,
+from repro.core import (A2CConfig, RewardWeights,
                         make_paper_env, make_tpu_env, make_train_episode,
-                        init_agent, train_agent, transformer_profile,
+                        init_agent, transformer_profile,
                         env_reset, env_step)
-from repro.core.baselines import POLICIES
+from repro.policies import build_policy
 from repro.core.latency import LatencyParams
 from repro.models import init
 from repro.optim import adamw_init
@@ -91,8 +91,9 @@ def test_fleet_simulate_bit_reproducible():
     cfg, tables = make_paper_env(slot_seconds=10.0)
     trace = PoissonTrace(rate_rps=8.0)
     kw = dict(n_requests=3000, seed=11, fleet=FleetConfig(slo_s=1.0))
-    r1 = simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)
-    r2 = simulate(cfg, tables, POLICIES["greedy_oracle"], trace, **kw)
+    oracle = build_policy("greedy_oracle", cfg, tables)
+    r1 = simulate(cfg, tables, oracle, trace, **kw)
+    r2 = simulate(cfg, tables, oracle, trace, **kw)
     np.testing.assert_array_equal(r1.metrics.latencies_s,
                                   r2.metrics.latencies_s)
     np.testing.assert_array_equal(r1.metrics.energies_j,
@@ -107,8 +108,10 @@ def test_fleet_request_stream_is_policy_independent():
     cfg, tables = make_paper_env(slot_seconds=10.0)
     trace = PoissonTrace(rate_rps=8.0)
     kw = dict(n_requests=2000, seed=5, fleet=FleetConfig(slo_s=1.0))
-    r1 = simulate(cfg, tables, POLICIES["device_only"], trace, **kw)
-    r2 = simulate(cfg, tables, POLICIES["full_offload"], trace, **kw)
+    r1 = simulate(cfg, tables, build_policy("device_only", cfg, tables),
+                  trace, **kw)
+    r2 = simulate(cfg, tables, build_policy("full_offload", cfg, tables),
+                  trace, **kw)
     assert [e["arrivals"] for e in r1.epoch_log] == \
         [e["arrivals"] for e in r2.epoch_log]
 
@@ -203,9 +206,8 @@ def test_a2c_beats_static_baselines_on_mmpp():
                                  peak_rps=burst, slot_seconds=10.0,
                                  frames_per_slot=10.0 * burst)
     mids = np.zeros(n, np.int32)   # homogeneous vgg fleet
-    params, _ = train_agent(cfg, tables,
-                            A2CConfig(episodes=500, entropy_coef=0.03),
-                            seed=0, trace=RandomRateTrace(max_rps=burst))
+    a2c = build_policy("a2c", cfg, tables, episodes=500, entropy_coef=0.03)
+    a2c.train(seed=0, trace=RandomRateTrace(max_rps=burst))
     trace = MMPPTrace(rate_low_rps=2.0, rate_high_rps=burst)
 
     def mean_slo(policy):
@@ -217,8 +219,8 @@ def test_a2c_beats_static_baselines_on_mmpp():
             vals.append(res.summary["slo_attainment"])
         return float(np.mean(vals))
 
-    a2c = mean_slo(agent_policy(params))
-    local = mean_slo(POLICIES["device_only"])
-    offload = mean_slo(POLICIES["full_offload"])
-    assert a2c > local, (a2c, local)
-    assert a2c > offload, (a2c, offload)
+    a2c_slo = mean_slo(a2c)
+    local = mean_slo(build_policy("device_only", cfg, tables))
+    offload = mean_slo(build_policy("full_offload", cfg, tables))
+    assert a2c_slo > local, (a2c_slo, local)
+    assert a2c_slo > offload, (a2c_slo, offload)
