@@ -24,6 +24,8 @@ System benches:
   scenario_sweep        — every registered scenario preset via run_scenario
   train_throughput      — A2C episodes/s, batched (vmap) vs looped
   pricing_numpy_throughput — numpy pricing-core actions/s (fleet hot path)
+  online_adaptation     — repro.online incremental-update steps/s +
+                          link-brownout drift recovery time
   kernels_interpret     — Pallas flash-attention kernel (interpret mode)
 """
 from __future__ import annotations
@@ -64,17 +66,19 @@ def _timeit(fn, n=5):
 # --------------------------------------------------------------------------
 
 def table1_profiles():
-    from repro.core import paper_profiles
-    t0 = time.perf_counter()
-    profs = paper_profiles()
-    us = (time.perf_counter() - t0) * 1e6
-    for p in profs.values():
-        for v in p.versions:
-            cuts = ";".join(str(c) for c in v.cut_points)
-            mb = ";".join(f"{v.cut_bytes(c)/1e6:.2f}" for c in v.cut_points)
-            row(f"table1_{v.model}{v.version}", us,
-                f"cuts={cuts} act_MB={mb} GF={v.total_flops/1e9:.1f} "
-                f"acc={v.accuracy:.3f}")
+    """Table I rows, each timing its *own* model-version profile build
+    (the historical harness timed one shared paper_profiles() call, so
+    every row reported the identical us_per_call)."""
+    from repro.core.profiles import PAPER_VERSIONS, paper_version_profile
+    for model, version in PAPER_VERSIONS:
+        t0 = time.perf_counter()
+        v = paper_version_profile(model, version)
+        us = (time.perf_counter() - t0) * 1e6
+        cuts = ";".join(str(c) for c in v.cut_points)
+        mb = ";".join(f"{v.cut_bytes(c)/1e6:.2f}" for c in v.cut_points)
+        row(f"table1_{v.model}{v.version}", us,
+            f"cuts={cuts} act_MB={mb} GF={v.total_flops/1e9:.1f} "
+            f"acc={v.accuracy:.3f}")
 
 
 def _sweep(weight_name: str, fig: str, use_agent: bool, episodes: int):
@@ -474,6 +478,70 @@ def scenario_sweep(n_requests=2000):
             f"device_only_slo_att={d['slo_attainment']:.3f}")
 
 
+def online_adaptation(window=64, iters=50):
+    """repro.online: steps/s of the jitted incremental update on a full
+    replay window, plus a short drift run's recovery time (epochs from
+    the brownout boundary until the adapted controller is back within
+    10% of the per-regime greedy oracle)."""
+    import jax
+
+    from repro.core.env import env_reset
+    from repro.online import OnlineConfig, OnlineLearner
+    from repro.policies import build_policy
+    from repro.scenarios import get_scenario
+    from repro.sim import FleetConfig, simulate
+
+    sc = get_scenario("link-brownout")
+    cfg, tables, mids, _ = sc.build_env()
+    n = cfg.n_uavs
+    a2c = build_policy("a2c", cfg, tables, episodes=sc.episodes,
+                       entropy_coef=sc.entropy_coef,
+                       batch_envs=sc.batch_envs)
+    a2c.train(seed=0, trace=sc.build_train_trace())
+    snap = a2c.params
+
+    # 1) raw incremental-update throughput on a synthetic full window
+    oc = OnlineConfig(algo="a2c", gate="always")
+    ln = OnlineLearner(a2c, oc, mids)
+    state = env_reset(cfg, tables, jax.random.key(0),
+                      model_ids=jnp.asarray(mids))
+    r = np.random.default_rng(0)
+    for _ in range(window):
+        acts = np.stack([r.integers(0, tables.n_versions, n),
+                         r.integers(0, tables.n_cuts, n)], -1)
+        ln.observe_transition(state, acts.astype(np.int32),
+                              r.normal(size=n), np.ones(n), 0)
+    batch = ln.window.tail(window)
+    step = ln._update(window)
+    params, opt = a2c.params, ln._opt(a2c.params)
+    params, opt = step(params, opt, batch["obs"], batch["actions"],
+                       batch["logp"], batch["reward"], batch["mask"])
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        params, opt = step(params, opt, batch["obs"], batch["actions"],
+                           batch["logp"], batch["reward"], batch["mask"])
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    us = (time.perf_counter() - t0) / iters * 1e6
+
+    # 2) drift recovery through the link-brownout preset's world
+    a2c.set_params(snap)
+    res = simulate(cfg, tables, a2c, sc.build_trace(),
+                   n_requests=sc.n_requests, seed=0,
+                   fleet=FleetConfig(slo_s=sc.slo_s), model_ids=mids,
+                   schedule=sc.build_schedule(), online=sc.build_online())
+    a2c.set_params(snap)
+    reg = res.adaptation["regimes"][1]
+    onl = res.adaptation["online"]
+    rec = reg["recovery_epochs"]
+    row("online_adaptation", us,
+        f"update_steps_per_s={1e6/us:.1f} window={window} "
+        f"scenario={sc.name} "
+        f"recovery_epochs={'never' if rec is None else int(rec)} "
+        f"regret={reg['regret']:.3f} updates={onl['updates']} "
+        f"bursts={onl['bursts']}")
+
+
 def kernels_interpret():
     from repro.kernels.flash_attention import flash_attention
     r = np.random.default_rng(0)
@@ -525,7 +593,7 @@ ALL = [table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
        hillclimb_variants,
        serving_decode, split_inference, continuous_batching,
        scheduler_throughput, fleet_sim, scenario_sweep, train_throughput,
-       pricing_numpy_throughput,
+       pricing_numpy_throughput, online_adaptation,
        kernels_interpret, quant_matmul]
 
 

@@ -20,6 +20,15 @@ percentiles, SLO attainment, goodput and energy.
     PYTHONPATH=src python scripts/simulate.py --scenario diurnal-fleet \
         --compare a2c,device_only --load-policy controller.npz
 
+    # nonstationary world + closed-loop adaptation: the preset pairs the
+    # online-adapted controller against the same controller frozen at
+    # its pre-drift parameters (repro.online)
+    PYTHONPATH=src python scripts/simulate.py --scenario flash-crowd
+
+    # apply a named drift schedule + online adaptation to any preset
+    PYTHONPATH=src python scripts/simulate.py --scenario diurnal-fleet \
+        --drift-schedule link-brownout --online
+
     # no --scenario: flags assemble a custom scenario (legacy behavior)
     PYTHONPATH=src python scripts/simulate.py --trace diurnal --devices 8 \
         --requests 100000
@@ -44,7 +53,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 from repro.core import RewardWeights
 from repro.policies import get_policy_spec, policy_names
 from repro.scenarios import (Scenario, get_scenario, run_scenario,
-                             scenario_names)
+                             scenario_names, split_policy_name)
 
 # Flag defaults live here (not on the parser): the parser suppresses
 # absent flags so a preset scenario only sees the overrides the user
@@ -53,6 +62,7 @@ DEFAULTS = dict(
     scenario=None, list_scenarios=False,
     trace="diurnal", devices=8, requests=100_000,
     policy=None, compare=None, seeds="0",
+    online=False, drift_schedule=None,
     episodes=300, train_seed=0, save_policy=None, load_policy=None,
     slo_ms=2000.0, slot_seconds=10.0,
     rate=6.0, rate_low=2.0, rate_high=30.0, peak_rps=30.0,
@@ -92,6 +102,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seeds",
                     help="comma-separated sim seeds; metrics average "
                     "over them (same seed = same request stream)")
+    ap.add_argument("--online", action="store_true",
+                    help="run every trainable policy in the roster with "
+                    "online adaptation ('name+online') alongside its "
+                    "frozen variant (repro.online)")
+    ap.add_argument("--drift-schedule", metavar="NAME",
+                    help="apply a named WorldSchedule (link-brownout, "
+                    "battery-cliff, flash-crowd, device-churn) to the "
+                    "scenario; overrides a preset's own drift")
     ap.add_argument("--episodes", type=int,
                     help="training budget for trainable policies")
     ap.add_argument("--train-seed", type=int)
@@ -196,6 +214,10 @@ def apply_overrides(sc: Scenario, provided: dict, merged: dict) -> Scenario:
            if flag in provided}
     if wkw:
         repl["weights"] = dataclasses.replace(sc.weights, **wkw)
+    if "drift_schedule" in provided:
+        repl["drift"] = provided["drift_schedule"]
+        if provided["drift_schedule"] != sc.drift:
+            repl["drift_kw"] = {}    # new kind: factory defaults
     if repl:
         sc = sc.replace(**repl)
     return trace_override(sc, provided, merged)
@@ -222,6 +244,7 @@ def scenario_from_args(merged: dict) -> Scenario:
         n_requests=merged["requests"], episodes=merged["episodes"],
         train_seed=merged["train_seed"], execute=merged["execute"],
         sample=merged["sample"], exec_seq=merged["exec_seq"],
+        drift=merged["drift_schedule"],
         trace=trace, trace_kw=kw)
 
 
@@ -270,11 +293,25 @@ def main():
     else:
         names = ("a2c",)
     try:
-        specs = [get_policy_spec(n) for n in names]
+        parsed = [split_policy_name(n) for n in names]
+        specs = [get_policy_spec(base) for base, _ in parsed]
     except KeyError as e:
         ap.error(str(e.args[0]))
 
-    trainable = [s.name for s in specs if s.trainable]
+    if merged["online"]:
+        # every trainable roster entry gains its '+online' adapted
+        # variant (before the frozen one, matching the preset layout)
+        expanded = []
+        adapted = {b for (b, o) in parsed if o}
+        for n, (base, is_online), spec in zip(names, parsed, specs):
+            if spec.trainable and not is_online and base not in adapted:
+                expanded.append(f"{base}+online")
+            expanded.append(n)
+        names = tuple(dict.fromkeys(expanded))
+
+    trainable = sorted({split_policy_name(n)[0] for n in names
+                        if get_policy_spec(
+                            split_policy_name(n)[0]).trainable})
     if (merged["save_policy"] or merged["load_policy"]) and not trainable:
         ap.error("--save-policy/--load-policy need a trainable policy "
                  f"(a2c, ppo) in the roster; got {','.join(names)}")

@@ -99,7 +99,10 @@ def greedy_actions(params, obs_flat, valid_v):
                      axis=-1).astype(jnp.int32)
 
 
-def logp_entropy(params, obs_flat, actions, valid_v):
+def device_logp_entropy(params, obs_flat, actions, valid_v):
+    """Per-device (log-prob, entropy) of the taken actions, shape (n,)
+    each — the per-UAV terms ``logp_entropy`` sums; the online learner
+    (repro.online.adapt) weights them by per-device advantages."""
     lv, lc = actor_apply(params, obs_flat)
     lv = _mask_logits(lv, valid_v)
     logp_v = jax.nn.log_softmax(lv, -1)
@@ -108,6 +111,11 @@ def logp_entropy(params, obs_flat, actions, valid_v):
           + jnp.take_along_axis(logp_c, actions[:, 1:2], -1)[:, 0])
     ent = (-jnp.sum(jnp.exp(logp_v) * logp_v, -1)
            - jnp.sum(jnp.exp(logp_c) * logp_c, -1))
+    return lp, ent
+
+
+def logp_entropy(params, obs_flat, actions, valid_v):
+    lp, ent = device_logp_entropy(params, obs_flat, actions, valid_v)
     return jnp.sum(lp), jnp.sum(ent)
 
 

@@ -271,17 +271,28 @@ def _clip_cuts(cuts: Sequence[int], n: int) -> Tuple[int, ...]:
     return tuple(min(c, n) for c in cuts)
 
 
+# (model, version) pairs of the paper's Table I, in table order —
+# public so the benchmark harness can build (and time) each version's
+# profile individually
+PAPER_VERSIONS: Tuple[Tuple[str, str], ...] = tuple(_TABLE_I)
+
+
+def paper_version_profile(model: str, version: str) -> VersionProfile:
+    """Build one paper model version's layer profile + Table I cuts."""
+    layers = tuple(_BUILDERS[model](version))
+    cuts = _clip_cuts(_TABLE_I[(model, version)], len(layers))
+    return VersionProfile(model, version, _PAPER_ACC[(model, version)],
+                          layers, cuts)
+
+
 def paper_profiles() -> Dict[str, ModelProfile]:
     out = {}
-    for model, versions in (("vgg", ("11", "19")), ("resnet", ("18", "50")),
-                            ("densenet", ("121", "161"))):
-        vps = []
-        for v in versions:
-            layers = tuple(_BUILDERS[model](v))
-            cuts = _clip_cuts(_TABLE_I[(model, v)], len(layers))
-            vps.append(VersionProfile(model, v, _PAPER_ACC[(model, v)],
-                                      layers, cuts))
-        out[model] = ModelProfile(model, tuple(vps))
+    for model, version in PAPER_VERSIONS:
+        vp = paper_version_profile(model, version)
+        if model not in out:
+            out[model] = ModelProfile(model, (vp,))
+        else:
+            out[model] = ModelProfile(model, out[model].versions + (vp,))
     return out
 
 

@@ -1,0 +1,346 @@
+"""Online adaptation: windowed replay + jitted incremental updates +
+policy hot-swap, closing the controller->serving loop under drift.
+
+The fleet loop (``repro.sim.fleet``) captures one *measured* transition
+per decision epoch — the observation the controller actually decided
+from, the actions it took, its behavior log-prob, and the epoch reward
+priced under the **current regime's** physics — into a windowed replay
+buffer. On the configured cadence an incremental update step (one jit,
+reusing ``core.actor_critic``'s return/GAE and log-prob machinery for
+both the A2C and PPO objectives) improves the parameters on the recent
+window, and the new parameters hot-swap into the serving loop through
+the PR-4 ``Policy.jitted()`` param-swap path (``TrainablePolicy``
+specializes it to re-bind without re-tracing).
+
+Adaptation is gated by the drift monitor (``repro.online.monitor``):
+under ``gate="drift"`` a Page-Hinkley trigger opens a burst of
+``burst_epochs`` during which the policy explores (per-device
+epsilon-mix of logit sampling over argmax) and updates run; outside
+bursts the policy serves greedily and spends zero update compute —
+re-arming while the EWMA regret vs the per-regime oracle stays high.
+``gate="always"`` adapts continuously; ``gate="off"`` only monitors.
+
+Everything is deterministic given the simulation seed: updates consume
+no RNG (recorded actions, no sampling inside the loss), exploration
+draws use the fleet's per-epoch policy key, and the replay window
+flushes at regime boundaries so stale-physics rewards never leak into
+the new regime's gradient (tested in ``tests/test_online.py``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.online.monitor import DriftMonitor
+
+
+def _normalize(x, mask):
+    """Mask-weighted standardization (dead devices excluded)."""
+    import jax.numpy as jnp
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    mean = jnp.sum(x * mask) / denom
+    var = jnp.sum(jnp.square(x - mean) * mask) / denom
+    return (x - mean) / (jnp.sqrt(var) + 1e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """Update-cadence / compute-budget knobs for online adaptation."""
+    window: int = 64            # replay window, epochs
+    min_window: int = 8         # don't update on fewer transitions
+    update_every: int = 1       # epochs between incremental updates
+    updates_per_step: int = 1   # grad steps per update (compute budget)
+    # Gentle steps: Adam moves ~lr per weight per step, and per-weight
+    # shifts compound through the head layers into O(100x) logit swings;
+    # 1e-3 re-aligns a regime in ~30 updates while 5e-3+ saturates the
+    # softmax into an arbitrary action within a burst (measured).
+    lr: float = 1e-3
+    gamma: float = 0.5          # short horizon: slot scores are immediate
+    entropy_coef: float = 0.02  # resists softmax saturation mid-burst
+    # Freeze the actor trunk (l1/l2) and adapt only the light per-UAV
+    # heads (+ the critic): Adam's scale-free steps over the highly
+    # correlated sliding-window gradients otherwise walk *every* weight
+    # ~lr per update, and after ~100 updates the 4-layer composition
+    # blows the logits up (catastrophic forgetting in minutes). Head-only
+    # adaptation bounds the damage to one linear map per device — and is
+    # the cheap-compute choice an edge deployment would make anyway.
+    adapt_trunk: bool = False
+    value_coef: float = 0.5
+    clip: float = 0.2           # PPO surrogate clip (algo="ppo")
+    algo: str = "a2c"           # "a2c" | "ppo" (set from the policy)
+    # drift gating
+    gate: str = "drift"         # "drift" | "always" | "off"
+    burst_epochs: int = 60      # adaptation burst length after a trigger
+    # per-device probability of sampling (vs argmax) during a burst:
+    # diverse enough to feed the gradient, cheap enough that exploring
+    # a catastrophic action doesn't dominate the serving metrics
+    explore_eps: float = 0.25
+    # Page-Hinkley only fires on reward *drops*; a policy that climbed
+    # out of the hole but stalled short of the regime's oracle would
+    # otherwise freeze mid-adaptation. While the EWMA regret exceeds
+    # regret_frac * |oracle|, expired bursts re-arm.
+    regret_frac: float = 0.3
+    ewma: float = 0.2
+    ph_delta: float = 0.01
+    ph_lambda: float = 0.5
+
+
+class ReplayWindow:
+    """Windowed buffer of measured transitions, flushed at regime
+    boundaries: a transition priced under the old physics is a wrong
+    label for the new regime's gradient, so the window only ever holds
+    consecutive same-regime epochs (newest last)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._buf = collections.deque(maxlen=self.capacity)
+        self.regime: Optional[int] = None
+
+    def push(self, item: Dict, regime: int):
+        if regime != self.regime:
+            self._buf.clear()
+            self.regime = regime
+        self._buf.append(item)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def tail(self, n: int) -> Dict[str, np.ndarray]:
+        """Stack the newest ``n`` transitions into (T, ...) arrays."""
+        items = list(self._buf)[-n:]
+        return {k: np.stack([it[k] for it in items])
+                for k in items[0]}
+
+
+def _bucket(n: int, min_window: int, capacity: int) -> int:
+    """Largest min_window * 2^k <= n (capped at capacity): the update
+    jit specializes on window length, so lengths are quantized to a few
+    power-of-two buckets instead of retracing every epoch."""
+    b = min_window
+    while b * 2 <= min(n, capacity):
+        b *= 2
+    return b
+
+
+class OnlineLearner:
+    """Owns the window, the monitor, the optimizer state and the jitted
+    update step for one trainable policy inside one fleet simulation."""
+
+    def __init__(self, policy, cfg: OnlineConfig, model_ids):
+        if not policy.trainable:
+            raise ValueError(f"online adaptation needs a trainable policy; "
+                             f"{policy.name!r} is not")
+        self.policy = policy
+        self.cfg = cfg
+        self.window = ReplayWindow(cfg.window)
+        self.monitor = DriftMonitor(ewma=cfg.ewma, ph_delta=cfg.ph_delta,
+                                    ph_lambda=cfg.ph_lambda)
+        self.updates = 0
+        self.bursts = 0
+        self.burst_until = -1
+        self._o_ew = None
+        self._opt_state = None
+        self._update_jits: Dict[int, object] = {}
+        self._capture_jits: Dict[float, object] = {}
+        self._env_cfg, self._tables = policy.env_cfg, policy.tables
+        self._valid = policy.tables.version_valid[np.asarray(model_ids)]
+
+    def _capture(self, eps: float):
+        """Jitted capture, specialized per exploration rate: the
+        behavior density of the taken (version, cut) pair under the
+        epsilon-mixed acting policy is eps * pi(a) + (1 - eps) *
+        1[a == argmax] — recording the bare softmax log pi(a) instead
+        would weight the mostly-argmax window as if it were sampled
+        on-policy and bias the PPO ratio."""
+        if eps in self._capture_jits:
+            return self._capture_jits[eps]
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.actor_critic import (device_logp_entropy,
+                                             greedy_actions)
+        from repro.core.env import observe
+
+        env_cfg, tables, valid = self._env_cfg, self._tables, self._valid
+
+        def capture(params, state, actions):
+            obs = observe(env_cfg, tables, state).reshape(-1)
+            lp, _ = device_logp_entropy(params, obs, actions, valid)
+            if eps <= 0.0:
+                # deterministic argmax behavior: density 1 for the
+                # taken action
+                return obs, jnp.zeros_like(lp)
+            greedy = greedy_actions(params, obs, valid)
+            is_greedy = jnp.all(actions == greedy, axis=-1)
+            p = eps * jnp.exp(lp) + (1.0 - eps) * is_greedy
+            return obs, jnp.log(jnp.maximum(p, 1e-30))
+
+        self._capture_jits[eps] = jax.jit(capture)
+        return self._capture_jits[eps]
+
+    # -- per-epoch hooks (called from the fleet loop) ----------------------
+
+    def observe_transition(self, state, actions, rewards, mask,
+                           regime: int):
+        """Record one measured transition: the decided-from observation,
+        the taken actions, *per-device* rewards (the per-UAV weighted
+        scores before Eq. 8's fleet mean — per-device credit is what
+        gives the incremental gradient a direction when every epoch is
+        equally bad on average), the alive mask, and the behavior
+        log-density fixed at capture time (the PPO surrogate needs it)."""
+        eps = float(getattr(self.policy, "explore", 0.0))
+        obs, lp = self._capture(eps)(self.policy.params, state,
+                                     np.asarray(actions))
+        self.window.push({"obs": np.asarray(obs),
+                          "actions": np.asarray(actions, np.int32),
+                          "logp": np.asarray(lp, np.float32),
+                          "reward": np.asarray(rewards, np.float32),
+                          "mask": np.asarray(mask, np.float32)}, regime)
+
+    def step(self, epoch: int, reward: float,
+             oracle_reward: Optional[float] = None) -> bool:
+        """Advance gating and maybe run an incremental update; returns
+        True when the policy's params were hot-swapped this epoch.
+        ``oracle_reward`` (the per-regime greedy oracle's epoch reward,
+        supplied by the fleet loop) re-arms expired bursts while the
+        policy is still far from the regime's achievable level."""
+        cfg = self.cfg
+        triggered = self.monitor.update(reward)
+        if oracle_reward is not None:
+            o = float(oracle_reward)
+            self._o_ew = o if self._o_ew is None \
+                else self._o_ew + cfg.ewma * (o - self._o_ew)
+            # monitor.level is the same-alpha EWMA of the reward stream
+            gap = self._o_ew - self.monitor.level
+            if gap > cfg.regret_frac * max(abs(self._o_ew), 1e-9) and \
+                    len(self.window) >= cfg.min_window:
+                triggered = True
+        # a trigger during an active burst does not extend it: each
+        # burst's exploration cost is bounded, and if the regime is
+        # still bad after the burst the gate simply re-arms
+        if cfg.gate == "drift" and triggered and \
+                epoch >= self.burst_until:
+            self.burst_until = epoch + cfg.burst_epochs
+            self.bursts += 1
+        active = cfg.gate == "always" or (
+            cfg.gate == "drift" and epoch < self.burst_until)
+        if hasattr(self.policy, "set_explore"):
+            self.policy.set_explore(cfg.explore_eps if active else 0.0)
+        if not active or epoch % cfg.update_every != 0:
+            return False
+        if len(self.window) < cfg.min_window:
+            return False
+        n = _bucket(len(self.window), cfg.min_window, cfg.window)
+        batch = self.window.tail(n)
+        params = self.policy.params
+        for _ in range(cfg.updates_per_step):
+            params, self._opt_state = self._update(n)(
+                params, self._opt(params), batch["obs"], batch["actions"],
+                batch["logp"], batch["reward"], batch["mask"])
+        self.updates += 1
+        self.policy.set_params(params)
+        return True
+
+    # -- update machinery --------------------------------------------------
+
+    def _opt(self, params):
+        if self._opt_state is None:
+            from repro.optim import adamw_init
+            self._opt_state = adamw_init(params)
+        return self._opt_state
+
+    def _update(self, n: int):
+        """Jitted incremental update specialized on window length ``n``:
+        per-device n-step returns (A2C) or per-device GAE + clipped
+        surrogate (PPO) over the (T, n_uavs) window — the shared
+        ``core.actor_critic`` return/GAE machinery vmapped across the
+        device axis — one AdamW step, constant LR. Per-device credit:
+        the actor gradient weights each device's log-prob by that
+        device's own advantage, masked by liveness."""
+        if n in self._update_jits:
+            return self._update_jits[n]
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.actor_critic import (critic_apply,
+                                             device_logp_entropy,
+                                             discounted_returns, gae)
+        from repro.optim import AdamWConfig, adamw_update
+
+        cfg = self.cfg
+        opt = AdamWConfig(lr=cfg.lr, weight_decay=0.0, warmup_steps=0,
+                          total_steps=1, grad_clip=1.0, min_lr_ratio=1.0)
+        valid = self._valid
+
+        def loss_fn(params, obs, actions, old_logp, rewards, mask):
+            def per_step(o, a):
+                lp, ent = device_logp_entropy(params, o, a, valid)
+                return lp, ent, critic_apply(params, o)
+            lp, ent, values = jax.vmap(per_step)(obs, actions)
+            # lp/ent/rewards/mask: (T, n); values: (T,)
+            # Standardize rewards over the window: drift regimes swing
+            # raw scores by orders of magnitude (a congested offload's
+            # latency score is ~-100x a local one's), and an O(100)
+            # critic regression would dominate the global grad-norm clip
+            # and starve the actor. Affine reward transforms leave the
+            # normalized advantage — hence the policy gradient — intact.
+            rewards = _normalize(rewards, mask) * mask
+            boot = jax.lax.stop_gradient(values[-1])
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+            if cfg.algo == "ppo":
+                advs, rets = jax.vmap(
+                    gae, in_axes=(1, None, None, None, None),
+                    out_axes=1)(rewards, values, boot, cfg.gamma, cfg.gamma)
+                a_n = _normalize(jax.lax.stop_gradient(advs), mask)
+                ratio = jnp.exp(lp - old_logp)
+                surr = jnp.minimum(
+                    ratio * a_n,
+                    jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * a_n)
+                actor_loss = -jnp.sum(surr * mask) / denom
+            else:
+                rets = jax.vmap(
+                    discounted_returns, in_axes=(1, None, None),
+                    out_axes=1)(rewards, boot, cfg.gamma)
+                adv = rets - values[:, None]
+                a_n = _normalize(jax.lax.stop_gradient(adv), mask)
+                actor_loss = -jnp.sum(lp * a_n * mask) / denom
+                rets = jax.lax.stop_gradient(rets)
+            # the critic baselines the fleet-mean per-device return
+            target = jnp.sum(rets * mask, -1) \
+                / jnp.maximum(jnp.sum(mask, -1), 1.0)
+            critic_loss = 0.5 * jnp.mean(
+                jnp.square(jax.lax.stop_gradient(target) - values))
+            entropy = jnp.sum(ent * mask) / denom
+            return (actor_loss + cfg.value_coef * critic_loss
+                    - cfg.entropy_coef * entropy)
+
+        @jax.jit
+        def update(params, opt_state, obs, actions, old_logp, rewards,
+                   mask):
+            grads = jax.grad(loss_fn)(params, obs, actions, old_logp,
+                                      rewards, mask)
+            if not cfg.adapt_trunk:
+                grads = dict(grads, actor=dict(
+                    grads["actor"],
+                    l1=jax.tree.map(jnp.zeros_like, grads["actor"]["l1"]),
+                    l2=jax.tree.map(jnp.zeros_like, grads["actor"]["l2"])))
+            params, opt_state, _ = adamw_update(opt, params, grads,
+                                                opt_state)
+            return params, opt_state
+
+        self._update_jits[n] = update
+        return update
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def summary(self) -> Dict:
+        return {"updates": self.updates,
+                "triggers": self.monitor.triggers,
+                "bursts": self.bursts,
+                "algo": self.cfg.algo, "gate": self.cfg.gate,
+                "window": self.cfg.window,
+                "update_every": self.cfg.update_every}

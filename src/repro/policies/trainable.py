@@ -16,7 +16,8 @@ import jax
 from repro.checkpointing import load_tree, save_tree
 from repro.core import a2c as A2C
 from repro.core import ppo as PPO
-from repro.core.actor_critic import greedy_actions, init_agent
+from repro.core.actor_critic import (greedy_actions, init_agent,
+                                     sample_actions)
 from repro.core.controller import make_task_sampler
 from repro.core.env import observe
 from repro.policies.base import Policy, PolicySpec, register
@@ -26,12 +27,23 @@ _ARTIFACT_SCHEMA = 1
 
 class TrainablePolicy(Policy):
     trainable = True
+    algo = "a2c"            # online-update objective (repro.online.adapt)
 
     def __init__(self, env_cfg, tables, config):
         super().__init__(env_cfg, tables)
         self.config = config
         self.params = None
         self.history = None
+        self.explore = 0.0
+        self._token = object()
+        self._jit_cache = {}
+
+    def _bump_token(self):
+        """Invalidate the jitted-act cache: ``Policy.jitted`` compares
+        ``_cache_token`` by identity, so anything that changes the baked
+        params or the act semantics (train/load/hot-swap/explore) must
+        mint a fresh token object."""
+        self._token = object()
 
     # -- subclass hooks ----------------------------------------------------
     def _init_params(self, rng):
@@ -44,18 +56,85 @@ class TrainablePolicy(Policy):
     def train(self, seed: int = 0, trace=None, log_every: int = 0):
         """Train from scratch; returns the per-episode stats history."""
         self.params, self.history = self._train(seed, trace, log_every)
+        self._bump_token()
         return self.history
+
+    def set_params(self, params):
+        """Hot-swap the serving parameters (the online-adaptation path):
+        the next ``jitted()`` call re-traces against the new params. The
+        swap is by reference — JAX arrays are immutable, so holding the
+        previous ``.params`` tree is a free pre-drift snapshot."""
+        self.params = params
+        self._bump_token()
+        return self
+
+    def set_explore(self, explore: float):
+        """Set the exploration rate in [0, 1]: each epoch, each device
+        independently samples the masked logits with probability
+        ``explore`` and acts greedily otherwise. Adaptation bursts need
+        action diversity for the incremental policy gradient, but full
+        sampling is needlessly destructive when a few actions are
+        catastrophic — epsilon-mixing bounds the serving cost of
+        exploring. No-op token-wise when unchanged."""
+        explore = float(explore)
+        if explore != self.explore:
+            self.explore = explore
+            self._bump_token()
+        return self
+
+    def _act(self, params, state, rng, eps: float):
+        """Greedy decide, epsilon-mixed with logit sampling per device
+        when ``eps`` > 0 (pure jnp; jit-traced with ``eps`` static)."""
+        import jax
+        import jax.numpy as jnp
+
+        obs = observe(self.env_cfg, self.tables, state).reshape(-1)
+        valid = self.tables.version_valid[state["model_id"]]
+        greedy = greedy_actions(params, obs, valid)
+        if eps <= 0.0 or rng is None:
+            return greedy
+        k1, k2 = jax.random.split(rng)
+        sampled = sample_actions(params, obs, valid, k1)
+        if eps >= 1.0:
+            return sampled
+        pick = jax.random.bernoulli(k2, eps, (greedy.shape[0], 1))
+        return jnp.where(pick, sampled, greedy)
 
     def act(self, state, rng=None):
         if self.params is None:
             raise RuntimeError(f"policy {self.name!r}: call train() or "
                                "load() before act()")
-        obs = observe(self.env_cfg, self.tables, state).reshape(-1)
-        valid = self.tables.version_valid[state["model_id"]]
-        return greedy_actions(self.params, obs, valid)
+        return self._act(self.params, state, rng, self.explore)
+
+    def jitted(self):
+        """Params-parametric specialization of ``Policy.jitted``: the
+        compiled decide step takes the parameter pytree as an argument,
+        so an online hot-swap (``set_params`` every few epochs under
+        ``repro.online.adapt``) re-binds instantly instead of paying a
+        re-trace per swap. One trace per exploration rate (greedy serving
+        and each burst epsilon); all of them read ``self.params`` at
+        call time, so they are never stale. The returned callable keeps
+        the base-class identity contract: stable while params/explore
+        are unchanged, a fresh object after any swap."""
+        import jax
+
+        if self.params is None:
+            raise RuntimeError(f"policy {self.name!r}: call train() or "
+                               "load() before act()")
+        token = self._token
+        if self._jit_fn is None or self._jit_token is not token:
+            eps = float(self.explore)
+            if eps not in self._jit_cache:
+                self._jit_cache[eps] = jax.jit(
+                    lambda params, state, rng: self._act(params, state,
+                                                         rng, eps))
+            fn = self._jit_cache[eps]
+            self._jit_fn = lambda state, rng: fn(self.params, state, rng)
+            self._jit_token = token
+        return self._jit_fn
 
     def _cache_token(self):
-        return self.params
+        return self._token
 
     def save(self, path: str) -> str:
         if self.params is None:
@@ -77,6 +156,7 @@ class TrainablePolicy(Policy):
             raise ValueError(f"artifact {path!r} holds a {saved_as!r} "
                              f"policy, not {self.name!r}")
         self.params = params
+        self._bump_token()
         return self
 
 
@@ -102,6 +182,7 @@ class PPOPolicy(TrainablePolicy):
     """Beyond-paper ablation: clipped-surrogate PPO on the same nets."""
 
     name = "ppo"
+    algo = "ppo"
 
     def __init__(self, env_cfg, tables, **cfg_kw):
         super().__init__(env_cfg, tables, PPO.PPOConfig(**cfg_kw))

@@ -9,9 +9,11 @@ with paired-seed comparisons built in.
 from repro.scenarios.base import Scenario
 from repro.scenarios.presets import (get_scenario, register_scenario,
                                      scenario_names)
-from repro.scenarios.run import ComparisonReport, PolicyResult, run_scenario
+from repro.scenarios.run import (ComparisonReport, PolicyResult,
+                                 run_scenario, split_policy_name)
 
 __all__ = [
     "Scenario", "ComparisonReport", "PolicyResult",
     "get_scenario", "register_scenario", "scenario_names", "run_scenario",
+    "split_policy_name",
 ]

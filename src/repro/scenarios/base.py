@@ -50,6 +50,18 @@ class Scenario:
     trace: str = "mmpp"
     trace_kw: Dict = dataclasses.field(default_factory=dict)
 
+    # --- nonstationarity / online adaptation (repro.online) ---------------
+    # named WorldSchedule factory (drift.get_schedule) + kwargs; None
+    # keeps the world stationary
+    drift: Optional[str] = None
+    drift_kw: Dict = dataclasses.field(default_factory=dict)
+    # OnlineConfig overrides for "+online" roster entries (the algo is
+    # taken from the policy spec: a2c -> a2c objective, ppo -> ppo)
+    online_kw: Dict = dataclasses.field(default_factory=dict)
+    # device battery override (Wh); nonstationary runs need the fleet
+    # to outlive the drift-recover cycle (paper env only)
+    battery_wh: Optional[float] = None
+
     # --- evaluation -------------------------------------------------------
     slo_s: float = 2.0
     seeds: Tuple[int, ...] = (0, 1, 2)   # paired across policies
@@ -75,6 +87,20 @@ class Scenario:
     # -- builders ----------------------------------------------------------
     def build_trace(self) -> Trace:
         return get_trace(self.trace, **self.trace_kw)
+
+    def build_schedule(self):
+        """The scenario's WorldSchedule, or None when stationary."""
+        if self.drift is None:
+            return None
+        from repro.online import get_schedule
+        return get_schedule(self.drift, **self.drift_kw)
+
+    def build_online(self, algo: str = "a2c"):
+        """OnlineConfig for a '+online' roster entry; ``algo`` comes
+        from the policy spec so A2C and PPO adapt with their own
+        objective on the shared incremental-update machinery."""
+        from repro.online import OnlineConfig
+        return OnlineConfig(algo=algo, **self.online_kw)
 
     def build_train_trace(self) -> Optional[Trace]:
         """The load process trainable policies see; None under the
@@ -103,13 +129,18 @@ class Scenario:
             lat_kw["bw_max_bps"] = self.bw_max_bps
         if self.bw_min_bps is not None:
             lat_kw["bw_min_bps"] = self.bw_min_bps
+        env_kw = {}
+        if self.battery_wh is not None:
+            from repro.core.energy import DevicePower
+            env_kw["power"] = DevicePower(battery_wh=self.battery_wh)
         env_cfg, tables = make_paper_env(
             weights=self.weights, n_uavs=self.devices,
             latency=LatencyParams(**lat_kw),
             slot_seconds=self.slot_seconds, peak_rps=self.peak_rps,
             # one frame per request at saturation: env battery drain per
             # slot equals the fleet's per-request metering
-            frames_per_slot=self.slot_seconds * max(self.peak_rps, 1.0))
+            frames_per_slot=self.slot_seconds * max(self.peak_rps, 1.0),
+            **env_kw)
         if self.models == "cycle":
             model_ids = np.arange(self.devices,
                                   dtype=np.int32) % tables.n_models

@@ -13,7 +13,7 @@ EdgeRL controller and the executable serving stack.
 """
 from repro.sim.traces import (DiurnalTrace, MMPPTrace, PoissonTrace,
                               RandomRateTrace, ReplayTrace, Trace,
-                              get_trace)
+                              get_trace, trace_names)
 from repro.sim.metrics import (FleetMetrics, LATENCY_SCHEMA,
                                summarize_latencies)
 from repro.sim.backends import AnalyticalBackend, ExecuteBackend
@@ -22,7 +22,8 @@ from repro.sim.fleet import FleetConfig, SimResult, simulate
 __all__ = [
     "Trace", "PoissonTrace", "MMPPTrace", "DiurnalTrace", "ReplayTrace",
     "RandomRateTrace",
-    "get_trace", "FleetMetrics", "LATENCY_SCHEMA", "summarize_latencies",
+    "get_trace", "trace_names",
+    "FleetMetrics", "LATENCY_SCHEMA", "summarize_latencies",
     "AnalyticalBackend", "ExecuteBackend", "FleetConfig", "SimResult",
     "simulate",
 ]

@@ -19,6 +19,16 @@ Each decision epoch (one env slot):
 Per-request end-to-end latency, SLO attainment, goodput and energy
 accumulate in ``FleetMetrics``; device backlogs carry across epochs, so
 bursts (MMPP) really queue instead of averaging away.
+
+Nonstationary worlds (``repro.online``): a ``WorldSchedule`` switches
+the *physics* — pricing config, world-dynamics bounds, trace scale,
+battery/churn side effects — at its regime boundaries, while the
+controller's observation normalization keeps the base-regime constants
+(sensors don't learn the world's config file changed). An
+``OnlineConfig`` additionally closes the loop: the fleet captures each
+epoch's measured transition, prices its reward under the *current*
+regime, and lets an ``OnlineLearner`` incrementally update and hot-swap
+the policy's parameters mid-run.
 """
 from __future__ import annotations
 
@@ -59,6 +69,9 @@ class SimResult:
     duration_s: float
     cross_check: Optional[Dict] = None
     epoch_log: List[Dict] = dataclasses.field(default_factory=list)
+    # drift/adaptation metrics (runs with a schedule or an OnlineConfig):
+    # per-regime reward/oracle/regret/recovery + online-learner counters
+    adaptation: Optional[Dict] = None
 
     @property
     def modal_selection(self):
@@ -75,22 +88,32 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
              trace: Trace, *, n_requests: int = 100_000, seed: int = 0,
              fleet: FleetConfig = FleetConfig(),
              backend: Optional[AnalyticalBackend] = None,
-             model_ids: Optional[Sequence[int]] = None) -> SimResult:
+             model_ids: Optional[Sequence[int]] = None,
+             schedule=None, online=None) -> SimResult:
     """Run the fleet until ``n_requests`` have arrived (or max_epochs).
 
     ``policy`` is a ``repro.policies.Policy`` built against this same
     (env_cfg, tables) world — ``act(state, rng) -> (n, 2) int32``; its
     jitted decide step is cached on the instance, so repeated simulate()
     calls with one policy object (seed sweeps, warm + timed benchmark
-    runs) compile once.
+    runs) compile once — and re-traced only when online adaptation
+    hot-swaps its params.
+
+    ``schedule`` (``repro.online.WorldSchedule``) switches the physics
+    regime at its patch epochs; ``online`` (``repro.online.OnlineConfig``)
+    enables closed-loop adaptation of a trainable policy. Either one
+    turns on per-regime adaptation metrics (``SimResult.adaptation``).
 
     The trace and the world dynamics draw from independent generators
-    spawned off one seed, and the draw order is policy-independent, so
-    two policies simulated with the same seed face the *identical*
-    request stream — and the whole run is bit-reproducible.
+    spawned off one seed, and the draw order is policy-independent
+    (drift patches and trace scaling fire on the epoch clock, never on
+    policy-driven state), so two policies simulated with the same seed
+    face the *identical* request stream — and the whole run, online
+    updates included, is bit-reproducible.
     """
     import jax
 
+    from repro.core import pricing
     from repro.core.controller import measured_state
 
     if policy.env_cfg is not env_cfg or policy.tables is not tables:
@@ -101,9 +124,34 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
             "the same objects (run_scenario does this for you)")
     cfg = env_cfg
     n = cfg.n_uavs
-    lp, pw = cfg.latency, cfg.power
     backend = backend if backend is not None else AnalyticalBackend(cfg,
                                                                     tables)
+
+    # -- nonstationarity + online adaptation --------------------------------
+    regimes, learner, tracker, np_t = None, None, None, None
+    if schedule is not None:
+        from repro.sim.backends import ExecuteBackend
+        if isinstance(backend, ExecuteBackend):
+            raise ValueError("drift schedules price through the analytical "
+                             "backend; the execute cross-check assumes one "
+                             "stationary table world")
+        regimes = schedule.compile(cfg)
+    if online is not None or schedule is not None:
+        from repro.online.monitor import AdaptationTracker, oracle_reward
+        tracker = AdaptationTracker()
+        np_t = pricing.numpy_tables(tables)
+    if online is not None:
+        from repro.online.adapt import OnlineLearner
+        learner = OnlineLearner(policy, online, model_ids if model_ids
+                                is not None else
+                                np.arange(n, dtype=np.int32)
+                                % tables.n_models)
+    regime_idx = 0
+    reg = regimes[0] if regimes else None
+    phys = cfg                    # current regime's physics config
+    phys_backend = backend
+    lp, pw = phys.latency, phys.power
+
     ss = np.random.SeedSequence(seed)
     s_trace, s_world = ss.spawn(2)
     t_rng = np.random.default_rng(s_trace)
@@ -125,12 +173,13 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
     obs_rate = np.full(n, trace.mean_rps)
     # load normalization must match what the controller trained on:
     # cfg.peak_rps when the stability-aware env is in play, else a
-    # 2x-mean heuristic for paper-faithful (Bernoulli-task) policies
+    # 2x-mean heuristic for paper-faithful (Bernoulli-task) policies.
+    # Fixed at the base regime — the controller's sensor calibration
+    # does not track drift.
     norm_rps = fleet.load_norm_rps or (
         cfg.peak_rps if cfg.peak_rps > 0 else max(2.0 * trace.mean_rps,
                                                   1e-9))
 
-    pol = policy.jitted()
     stream = trace.stream(t_rng, n, cfg.slot_seconds)
     metrics = FleetMetrics(slo_s=fleet.slo_s)
     hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts))
@@ -141,27 +190,55 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
 
     while served < n_requests and epoch < fleet.max_epochs:
         counts = np.asarray(next(stream), dtype=np.int64)
+
+        # -- regime switch (epoch-clock driven, policy-independent) --------
+        if regimes is not None:
+            r = schedule.regime_at(epoch)
+            if r != regime_idx:
+                regime_idx, reg = r, regimes[r]
+                phys = reg.env_cfg
+                lp, pw = phys.latency, phys.power
+                phys_backend = backend if phys is cfg \
+                    else AnalyticalBackend(phys, tables)
+                if reg.battery_scale is not None:
+                    battery = battery * reg.battery_scale
+                for d in reg.kill_devices:
+                    battery[d] = 0.0
+                for d in reg.revive_devices:
+                    battery[d] = pw.battery_j
+                    free_at[d] = t_now
+                # world variables snap into the new regime's bounds
+                bw = np.clip(bw, lp.bw_min_bps, lp.bw_max_bps)
+                p_tx = np.clip(p_tx, pw.p_tx_min, pw.p_tx_max)
+            if reg.trace_scale != 1.0:
+                from repro.online.drift import scale_counts
+                counts = np.asarray(
+                    scale_counts(t_rng, counts, reg.trace_scale),
+                    dtype=np.int64)
+
         alive = battery > 0.0
         if not alive.any():
             break
         queue_jobs = side_queue + backlog_s / lp.job_service_s
         srv_wait = queue_jobs * lp.job_service_s
+        obs_queue = min(queue_jobs, fleet.queue_obs_clip)
+        load = np.clip(obs_rate / norm_rps, 0.0, 1.0)
 
-        # 1) decide from measured state
+        # 1) decide from measured state (obs normalization: base regime)
         state = measured_state(
             cfg, tables, battery_j=battery, bandwidth=bw, p_tx=p_tx,
-            queue_jobs=min(queue_jobs, fleet.queue_obs_clip),
-            load=obs_rate / norm_rps,
+            queue_jobs=obs_queue, load=load,
             model_id=model_ids, activity=activity, t=epoch)
         jkey, k_pol = jax.random.split(jkey)
-        actions = np.asarray(pol(state, k_pol))
+        actions = np.asarray(policy.jitted()(state, k_pol))
 
-        # 2) price this epoch's actions
-        pr = backend.price(model_ids, actions, bw, p_tx)
+        # 2) price this epoch's actions under the current regime
+        pr = phys_backend.price(model_ids, actions, bw, p_tx)
 
         # 3) flow requests through device FIFOs (Lindley recursion)
         tail_in_s = 0.0
         dropped = 0
+        slo_hits = 0
         executed = False
         for d in range(n):
             c = int(counts[d])
@@ -186,14 +263,40 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                 lat = lat + srv_wait
                 tail_in_s += c * pr.tail_s[d]
             metrics.record(lat, np.full(c, pr.energy_j[d]), device=d)
+            slo_hits += int(np.sum(lat <= fleet.slo_s))
             hist[model_ids[d], actions[d, 0], actions[d, 1]] += c
             if not executed:
-                backend.maybe_execute(int(model_ids[d]),
-                                      int(actions[d, 0]),
-                                      int(actions[d, 1]))
+                phys_backend.maybe_execute(int(model_ids[d]),
+                                           int(actions[d, 0]),
+                                           int(actions[d, 1]))
                 executed = True
 
-        # 4) world dynamics (mirrors env_step, on the world rng)
+        # 3b) adaptation metrics + online update: the epoch's slot-level
+        # reward (Eq. 8 over the measured view) priced under the CURRENT
+        # regime, and the greedy oracle re-solved under the same regime
+        if tracker is not None:
+            view = pricing.StateView(
+                model_id=model_ids, bandwidth=bw, p_tx=p_tx,
+                queue=obs_queue, load=load)
+            br = pricing.price_actions(phys, np_t, view, actions, xp=np)
+            wts = phys.weights
+            per = (wts.w_acc * br.acc_score + wts.w_lat * br.lat_score
+                   + wts.w_energy * br.energy_score
+                   + wts.w_stab * br.stab_score)
+            amask = alive.astype(np.float64)
+            r_epoch = float((per * amask).sum()
+                            / max(amask.sum(), 1.0))
+            oracle_r = oracle_reward(phys, np_t, view, amask)
+            tracker.record(epoch, regime_idx,
+                           reg.name if reg is not None else "base",
+                           r_epoch, oracle_r)
+            if learner is not None:
+                learner.observe_transition(state, actions, per, amask,
+                                           regime_idx)
+                learner.step(epoch, r_epoch, oracle_reward=oracle_r)
+
+        # 4) world dynamics (mirrors env_step, on the world rng, under
+        #    the current regime's latency/power bounds)
         kin_p = np.asarray(en.kinetic_power(pw, activity[:, 0],
                                             activity[:, 1], activity[:, 2]))
         drain = np.where(alive, kin_p * cfg.slot_seconds
@@ -207,8 +310,8 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                            * cfg.activity_jitter, 0.0, 1.0)
         activity /= np.maximum(activity.sum(-1, keepdims=True), 1.0)
         side_queue = max(side_queue
-                         + float(w_rng.poisson(cfg.queue_arrival_rate))
-                         - cfg.queue_service_per_slot, 0.0)
+                         + float(w_rng.poisson(phys.queue_arrival_rate))
+                         - phys.queue_service_per_slot, 0.0)
         backlog_s = max(backlog_s + tail_in_s - cfg.slot_seconds, 0.0)
         obs_rate = (1.0 - fleet.ewma) * obs_rate \
             + fleet.ewma * counts / cfg.slot_seconds
@@ -220,13 +323,26 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                 "epoch": epoch, "arrivals": int(counts.sum()),
                 "queue_jobs": float(queue_jobs),
                 "backlog_s": float(backlog_s), "dropped": dropped,
-                "alive": int(alive.sum()),
+                "slo_hits": slo_hits,
+                "alive": int(alive.sum()), "regime": regime_idx,
             })
         epoch += 1
+
+    adaptation = None
+    if tracker is not None:
+        adaptation = tracker.summary(include_series=fleet.record_epochs)
+        adaptation["schedule"] = schedule.name if schedule is not None \
+            else None
+        if learner is not None:
+            adaptation["online"] = learner.summary()
+            # leave the policy in its serving (greedy) mode
+            if hasattr(policy, "set_explore"):
+                policy.set_explore(0.0)
 
     summary = metrics.summary(duration_s=t_now)
     summary["epochs"] = epoch
     summary["requests"] = served
     return SimResult(summary=summary, metrics=metrics, selection_hist=hist,
                      epochs=epoch, served=served, duration_s=t_now,
-                     cross_check=backend.cross_check(), epoch_log=epoch_log)
+                     cross_check=backend.cross_check(), epoch_log=epoch_log,
+                     adaptation=adaptation)

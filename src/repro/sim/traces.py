@@ -176,7 +176,14 @@ TRACES = {
 }
 
 
+def trace_names() -> tuple:
+    return tuple(sorted(TRACES))
+
+
 def get_trace(name: str, **kw) -> Trace:
+    """Canonical-name lookup; a miss names every valid trace (the same
+    convention as the policy/scenario/schedule registries)."""
     if name not in TRACES:
-        raise KeyError(f"unknown trace {name!r}; have {sorted(TRACES)}")
+        raise KeyError(f"unknown trace {name!r}; valid names: "
+                       f"{', '.join(trace_names())}")
     return TRACES[name](**kw)

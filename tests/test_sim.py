@@ -38,6 +38,20 @@ def test_traces_deterministic_and_nonnegative():
         assert trace.mean_rps > 0
 
 
+def test_get_trace_miss_lists_valid_names():
+    """Registry-convention miss: a KeyError naming every valid trace
+    (same as the policy/scenario/schedule registries)."""
+    from repro.sim import get_trace, trace_names
+
+    with pytest.raises(KeyError) as e:
+        get_trace("no-such-trace")
+    msg = str(e.value)
+    assert "valid names" in msg
+    for name in trace_names():
+        assert name in msg
+    assert tuple(sorted(TRACES)) == trace_names()
+
+
 def test_replay_trace_cycles_and_broadcasts():
     trace = ReplayTrace(counts=np.asarray([1, 2, 3]))
     gen = trace.stream(np.random.default_rng(0), 4, 30.0)
