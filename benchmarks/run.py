@@ -43,22 +43,47 @@ ROWS = []
 RECORDS = []
 
 
+class Timing(float):
+    """us-per-call headline number (min over repetitions — least noise)
+    that still *is* a float for every existing format/arithmetic site,
+    carrying the per-repetition samples for the JSON records."""
+
+    samples: tuple = ()
+
+    def __new__(cls, value, samples=()):
+        t = super().__new__(cls, value)
+        t.samples = tuple(float(s) for s in samples) or (float(value),)
+        return t
+
+
 def row(name: str, us_per_call: float, derived: str):
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
-    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                    "derived": derived})
+    samples = getattr(us_per_call, "samples", (float(us_per_call),))
+    RECORDS.append({"name": name,
+                    "us_per_call": round(float(us_per_call), 1),
+                    "derived": derived,
+                    "samples": len(samples),
+                    "min": round(min(samples), 1),
+                    "mean": round(float(np.mean(samples)), 1),
+                    "std": round(float(np.std(samples)), 1)})
     print(line, flush=True)
 
 
-def _timeit(fn, n=5):
+def _timeit(fn, n=5, reps=3):
+    """Median-free repeated timing: ``reps`` back-to-back repetitions of
+    an ``n``-call loop, each yielding one us-per-call sample; returns a
+    ``Timing`` (min sample) so ``row`` can report samples/min/mean/std."""
     out = fn()  # warmup/compile
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn()
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / n * 1e6)
+    return Timing(min(samples), samples)
 
 
 # --------------------------------------------------------------------------
@@ -446,11 +471,15 @@ def fleet_sim(n_requests=100_000):
     pol = build_policy("greedy_oracle", cfg, tables)
     kw = dict(n_requests=n_requests, seed=0, fleet=FleetConfig(slo_s=1.0))
     simulate(cfg, tables, pol, trace, **kw)  # warm
-    t0 = time.perf_counter()
-    res = simulate(cfg, tables, pol, trace, **kw)
-    dt = time.perf_counter() - t0
+    samples, dts = [], []
+    for _ in range(3):      # same seed: identical epochs each repetition
+        t0 = time.perf_counter()
+        res = simulate(cfg, tables, pol, trace, **kw)
+        dts.append(time.perf_counter() - t0)
+        samples.append(dts[-1] / max(res.epochs, 1) * 1e6)
+    dt = min(dts)
     s = res.summary
-    row("fleet_sim", dt / max(res.epochs, 1) * 1e6,
+    row("fleet_sim", Timing(min(samples), samples),
         f"per_epoch,req_per_s={res.served/dt:.0f} epochs_per_s="
         f"{res.epochs/dt:.1f} requests={res.served} "
         f"p95_s={s['p95']:.3f} slo_att={s['slo_attainment']:.3f}")
@@ -605,6 +634,9 @@ def main() -> None:
     ap.add_argument("--episodes", type=int, default=200)
     ap.add_argument("--json", default="BENCH_results.json",
                     help="write rows as JSON here ('' disables)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record obs events (spans, metrics, retrace "
+                    "accounting) for the benched runs to a JSONL file")
     args = ap.parse_args()
     known = {fn.__name__ for fn in ALL}
     selected = args.only.split(",") if args.only else None
@@ -612,22 +644,30 @@ def main() -> None:
         unknown = sorted(set(selected) - known)
         if unknown:
             ap.error(f"unknown benchmark(s) {unknown}; known: {sorted(known)}")
+    import contextlib
+
+    from repro import obs
+    rec_ctx = obs.recording(args.trace, meta={"tool": "benchmarks",
+                                              "argv": sys.argv[1:]}) \
+        if args.trace else contextlib.nullcontext()
     print("name,us_per_call,derived")
     errors = 0
-    for fn in ALL:
-        if selected and fn.__name__ not in selected:
-            continue
-        kw = {}
-        if fn.__name__ in ("fig2_accuracy_sweep", "fig3_latency_sweep",
-                           "fig4_energy_sweep", "table2_cut_selection"):
-            kw = dict(use_agent=args.agent, episodes=args.episodes)
-        elif fn.__name__ == "a2c_convergence":
-            kw = dict(episodes=args.episodes)
-        try:
-            fn(**kw)
-        except Exception as e:   # noqa: BLE001 - report but keep benching
-            row(fn.__name__, -1.0, f"ERROR={type(e).__name__}:{e}")
-            errors += 1
+    with rec_ctx:
+        for fn in ALL:
+            if selected and fn.__name__ not in selected:
+                continue
+            kw = {}
+            if fn.__name__ in ("fig2_accuracy_sweep", "fig3_latency_sweep",
+                               "fig4_energy_sweep", "table2_cut_selection"):
+                kw = dict(use_agent=args.agent, episodes=args.episodes)
+            elif fn.__name__ == "a2c_convergence":
+                kw = dict(episodes=args.episodes)
+            try:
+                with obs.span("bench", name=fn.__name__):
+                    fn(**kw)
+            except Exception as e:   # noqa: BLE001 - report, keep benching
+                row(fn.__name__, -1.0, f"ERROR={type(e).__name__}:{e}")
+                errors += 1
     if args.json:
         import json
         with open(args.json, "w") as f:

@@ -1,0 +1,47 @@
+"""Summarize an obs event trace (events.jsonl) into per-phase timing,
+drift/online timeline, metrics and JAX compile/retrace accounting.
+
+    # record a trace, then view it
+    PYTHONPATH=src python scripts/simulate.py --scenario link-brownout \
+        --trace-out events.jsonl
+    PYTHONPATH=src python scripts/obsview.py events.jsonl
+
+    # machine-readable folded report alongside the text view
+    PYTHONPATH=src python scripts/obsview.py events.jsonl --json obs.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs import report as obs_report
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("events", help="obs JSONL trace (simulate.py "
+                    "--trace-out / benchmarks/run.py --trace)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the folded report as JSON")
+    args = ap.parse_args()
+
+    try:
+        rep = obs_report.load(args.events)
+    except (OSError, ValueError) as e:
+        raise SystemExit(f"obsview: {e}")
+    print(obs_report.render(rep))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=2, default=str)
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

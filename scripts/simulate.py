@@ -40,6 +40,7 @@ percentiles, SLO attainment, goodput and energy.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import os
@@ -50,6 +51,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
+from repro import obs
 from repro.core import RewardWeights
 from repro.policies import get_policy_spec, policy_names
 from repro.scenarios import (Scenario, get_scenario, run_scenario,
@@ -69,7 +71,7 @@ DEFAULTS = dict(
     replay_file=None, models="cycle",
     w_acc=0.05, w_lat=0.10, w_energy=0.15, w_stab=0.70,
     env="paper", arch="qwen2-0.5b", execute=False, sample=16, exec_seq=32,
-    json=None,
+    json=None, quiet=False, verbose=0, trace_out=None,
 )
 
 # which CLI rate flags feed which trace constructor kwargs
@@ -147,6 +149,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sample", type=int)
     ap.add_argument("--exec-seq", type=int)
     ap.add_argument("--json", help="write results JSON here")
+    ap.add_argument("--quiet", action="store_true",
+                    help="warnings only on the console (a --trace-out "
+                    "file still records the full log)")
+    ap.add_argument("-v", "--verbose", action="count",
+                    help="more console detail (-v: debug narration)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="record structured obs events (spans, metrics, "
+                    "JAX retrace accounting) to a JSONL file; summarize "
+                    "with scripts/obsview.py")
     return ap
 
 
@@ -261,6 +272,9 @@ def main():
     ap = build_parser()
     provided = vars(ap.parse_args())
     merged = {**DEFAULTS, **provided}
+    # 0 = warnings only, 1 = the usual narration + tables, 2 = debug
+    obs.set_verbosity(0 if merged["quiet"]
+                      else 1 + (merged["verbose"] or 0))
 
     if merged["list_scenarios"]:
         for name in scenario_names():
@@ -321,26 +335,36 @@ def main():
     load_map = {n: artifact_path(merged["load_policy"], n, multi)
                 for n in trainable} if merged["load_policy"] else None
 
-    report = run_scenario(sc, names, save_policies=save_map,
-                          load_policies=load_map, verbose=True)
+    rec_ctx = obs.recording(
+        merged["trace_out"],
+        meta={"tool": "simulate", "scenario": sc.name,
+              "policies": list(names), "seeds": list(sc.seeds)}) \
+        if merged["trace_out"] else contextlib.nullcontext()
+    with rec_ctx:
+        report = run_scenario(sc, names, save_policies=save_map,
+                              load_policies=load_map, verbose=True)
 
     cross = next((r.cross_check for r in report.results.values()
                   if r.cross_check), None)
     if cross:
-        print(f"\nexecute cross-check: {cross['samples']} requests through "
-              f"SplitServingEngine; act-bytes exact={cross['bytes_exact']} "
-              f"({cross['bytes_mismatches']} mismatches); wall/analytical "
-              f"latency ratio median={cross['latency_ratio_median']:.2f} "
-              f"max={cross['latency_ratio_max']:.2f} "
-              f"(tolerance {cross['latency_tolerance']}x, within="
-              f"{cross['latency_within_tolerance']})")
+        obs.info(
+            f"\nexecute cross-check: {cross['samples']} requests through "
+            f"SplitServingEngine; act-bytes exact={cross['bytes_exact']} "
+            f"({cross['bytes_mismatches']} mismatches); wall/analytical "
+            f"latency ratio median={cross['latency_ratio_median']:.2f} "
+            f"max={cross['latency_ratio_max']:.2f} "
+            f"(tolerance {cross['latency_tolerance']}x, within="
+            f"{cross['latency_within_tolerance']})")
     if merged["json"]:
         out = report.to_json()
         out["config"] = {k: v for k, v in merged.items()
                          if k not in ("json", "list_scenarios")}
         with open(merged["json"], "w") as f:
             json.dump(out, f, indent=2, default=str)
-        print(f"\nwrote {merged['json']}")
+        obs.info(f"\nwrote {merged['json']}")
+    if merged["trace_out"]:
+        obs.info(f"wrote obs trace {merged['trace_out']}; summarize with: "
+                 f"python scripts/obsview.py {merged['trace_out']}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import ALL_ARCHS, get_config
 from repro.checkpointing import save_checkpoint
 from repro.data import DataConfig, SyntheticLMDataset
@@ -34,13 +35,17 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--quiet", action="store_true",
+                    help="warnings only on the console")
     args = ap.parse_args()
+    if args.quiet:
+        obs.set_verbosity(0)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    print(f"arch={args.arch} reduced={args.reduced} "
-          f"params={n_params(cfg):,} devices={jax.device_count()}")
+    obs.info(f"arch={args.arch} reduced={args.reduced} "
+             f"params={n_params(cfg):,} devices={jax.device_count()}")
     params = init(cfg, jax.random.key(0))
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                       total_steps=args.steps)
@@ -52,14 +57,15 @@ def main():
     t0 = time.time()
     for i in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
-        params, opt_state, m = step_fn(params, opt_state, batch)
+        with obs.span("train.step", step=i):
+            params, opt_state, m = step_fn(params, opt_state, batch)
         if (i + 1) % max(args.steps // 10, 1) == 0:
-            print(f"step {i+1:4d} loss={float(m['loss']):.4f} "
-                  f"gnorm={float(m['grad_norm']):.2f}", flush=True)
-    print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+            obs.info(f"step {i+1:4d} loss={float(m['loss']):.4f} "
+                     f"gnorm={float(m['grad_norm']):.2f}")
+    obs.info(f"{args.steps} steps in {time.time()-t0:.1f}s")
     if args.ckpt_dir:
-        print("checkpoint:", save_checkpoint(args.ckpt_dir, args.steps,
-                                             params))
+        obs.info("checkpoint: " + save_checkpoint(args.ckpt_dir, args.steps,
+                                                  params))
 
 
 if __name__ == "__main__":

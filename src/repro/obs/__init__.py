@@ -1,0 +1,34 @@
+"""repro.obs — structured tracing, metrics and JAX retrace accounting.
+
+One process-global recorder (null by default — zero overhead when off)
+behind module-level hooks:
+
+    from repro import obs
+
+    with obs.recording("events.jsonl") as rec:      # enable
+        with obs.span("fleet.epoch", epoch=0):       # nested timed span
+            obs.event("drift.regime_switch", regime=1)
+            obs.inc("fleet.dropped", 3, policy="a2c")  # labeled counter
+    # -> versioned JSONL; fold with scripts/obsview.py or obs.report
+
+JAX accounting (``obs.jaxmon``) counts jit re-traces per call site and
+compile wall-time process-wide; ``obs.log``/``info``/``debug``/``warn``
+is the structured console logger (verbosity-gated print + recorded log
+events). See DESIGN.md §9 for the architecture and the rules
+(recording never changes results; no host callbacks on traced paths).
+"""
+from repro.obs import jaxmon, report
+from repro.obs.events import (SCHEMA_VERSION, NullRecorder, Recorder,
+                              debug, event, get_recorder, get_verbosity,
+                              info, log, read_events, recording,
+                              set_recorder, set_verbosity, span, warn)
+from repro.obs.metrics import Metrics, gauge, inc, observe
+
+__all__ = [
+    "SCHEMA_VERSION", "Recorder", "NullRecorder", "Metrics",
+    "span", "event", "recording", "get_recorder", "set_recorder",
+    "read_events",
+    "inc", "gauge", "observe",
+    "log", "info", "debug", "warn", "set_verbosity", "get_verbosity",
+    "jaxmon", "report",
+]

@@ -1,0 +1,124 @@
+"""JAX-aware accounting: jit trace counts per call site + process-wide
+compile-time totals via ``jax.monitoring``.
+
+Two independent mechanisms, both host-side (nothing is inserted into a
+compiled graph — the no-host-callback rule of DESIGN.md §9):
+
+**Trace counting** — ``count_trace(site)`` is placed inside the Python
+body of an instrumented jit site (``Policy.jitted``, the online
+learner's capture/update jits). jit executes that body only while
+*tracing*; a cache hit never runs it. Each call therefore increments
+the site's counter exactly once per (re-)trace and costs nothing at
+execution time. This turns PR 5's "params hot-swapped without
+re-tracing" comment into a measured invariant: across an online
+adaptation run the ``decide.<policy>`` counter must not move on a
+param hot-swap, and must move exactly once on a genuine shape change
+(tests/test_obs.py).
+
+**Compile accounting** — a ``jax.monitoring`` duration listener
+accumulates the number and wall-time of jaxpr traces, MLIR lowerings
+and backend compiles process-wide, and mirrors each into the active
+recorder as a ``jax.compile`` event. ``Recorder`` snapshots these at
+start and emits the delta as one ``jax`` summary event at close, so an
+events.jsonl tells you how much of a run was spent compiling. The
+listener registers once (jax.monitoring has no unregister) and does
+work only when a compile actually happens.
+"""
+from __future__ import annotations
+
+import collections
+from contextlib import contextmanager
+from typing import Dict
+
+from repro.obs import events as _ev
+
+# site -> number of times jit traced it (process-wide, monotone)
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+# compile/trace/lowering totals from jax.monitoring (process-wide)
+_COMPILE: collections.Counter = collections.Counter()
+_INSTALLED = False
+
+_DURATION_EVENTS = {
+    "/jax/core/compile/jaxpr_trace_duration": "jaxpr_trace",
+    "/jax/core/compile/jaxpr_to_mlir_module_duration": "mlir_lower",
+    "/jax/core/compile/backend_compile_duration": "backend_compile",
+}
+
+
+def count_trace(site: str) -> None:
+    """Record one jit (re-)trace of ``site``. Call from inside the
+    traced Python body — it runs at trace time only, never inside the
+    compiled computation."""
+    _TRACE_COUNTS[site] += 1
+    rec = _ev.get_recorder()
+    if rec.enabled:
+        rec.event("jax.trace", site=site, n=_TRACE_COUNTS[site])
+
+
+def trace_counts() -> Dict[str, int]:
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+@contextmanager
+def track_traces():
+    """Yields a dict filled (on exit) with per-site trace-count deltas
+    for the block: ``{} `` means no site re-traced."""
+    before = dict(_TRACE_COUNTS)
+    delta: Dict[str, int] = {}
+    try:
+        yield delta
+    finally:
+        for k, v in _TRACE_COUNTS.items():
+            d = v - before.get(k, 0)
+            if d:
+                delta[k] = d
+
+
+def install() -> None:
+    """Register the jax.monitoring listener (idempotent)."""
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    import jax.monitoring
+
+    def _on_duration(event: str, duration: float, **kw) -> None:
+        key = _DURATION_EVENTS.get(event)
+        if key is None:
+            return
+        _COMPILE[key + "_n"] += 1
+        _COMPILE[key + "_s"] += duration
+        rec = _ev.get_recorder()
+        if rec.enabled:
+            rec.event("jax.compile", phase=key, dur=duration)
+
+    jax.monitoring.register_event_duration_secs_listener(_on_duration)
+    _INSTALLED = True
+
+
+def compile_stats() -> Dict[str, float]:
+    """Process-wide compile totals: {phase}_n counts and {phase}_s
+    seconds for jaxpr_trace / mlir_lower / backend_compile."""
+    install()
+    return dict(_COMPILE)
+
+
+@contextmanager
+def track_compiles():
+    """Yields a dict filled (on exit) with compile-stat deltas for the
+    block; ``backend_compile_n`` is the number of XLA compilations it
+    triggered."""
+    install()
+    before = dict(_COMPILE)
+    delta: Dict[str, float] = {}
+    try:
+        yield delta
+    finally:
+        for k, v in _COMPILE.items():
+            d = v - before.get(k, 0)
+            if d:
+                delta[k] = d

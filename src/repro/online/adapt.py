@@ -34,6 +34,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
+from repro.obs import jaxmon
 from repro.online.monitor import DriftMonitor
 
 
@@ -168,16 +170,17 @@ class OnlineLearner:
         env_cfg, tables, valid = self._env_cfg, self._tables, self._valid
 
         def capture(params, state, actions):
-            obs = observe(env_cfg, tables, state).reshape(-1)
-            lp, _ = device_logp_entropy(params, obs, actions, valid)
+            jaxmon.count_trace("online.capture")
+            ob = observe(env_cfg, tables, state).reshape(-1)
+            lp, _ = device_logp_entropy(params, ob, actions, valid)
             if eps <= 0.0:
                 # deterministic argmax behavior: density 1 for the
                 # taken action
-                return obs, jnp.zeros_like(lp)
-            greedy = greedy_actions(params, obs, valid)
+                return ob, jnp.zeros_like(lp)
+            greedy = greedy_actions(params, ob, valid)
             is_greedy = jnp.all(actions == greedy, axis=-1)
             p = eps * jnp.exp(lp) + (1.0 - eps) * is_greedy
-            return obs, jnp.log(jnp.maximum(p, 1e-30))
+            return ob, jnp.log(jnp.maximum(p, 1e-30))
 
         self._capture_jits[eps] = jax.jit(capture)
         return self._capture_jits[eps]
@@ -226,6 +229,8 @@ class OnlineLearner:
                 epoch >= self.burst_until:
             self.burst_until = epoch + cfg.burst_epochs
             self.bursts += 1
+            obs.event("online.burst_start", epoch=epoch,
+                      until=self.burst_until, burst=self.bursts)
         active = cfg.gate == "always" or (
             cfg.gate == "drift" and epoch < self.burst_until)
         if hasattr(self.policy, "set_explore"):
@@ -235,14 +240,18 @@ class OnlineLearner:
         if len(self.window) < cfg.min_window:
             return False
         n = _bucket(len(self.window), cfg.min_window, cfg.window)
-        batch = self.window.tail(n)
-        params = self.policy.params
-        for _ in range(cfg.updates_per_step):
-            params, self._opt_state = self._update(n)(
-                params, self._opt(params), batch["obs"], batch["actions"],
-                batch["logp"], batch["reward"], batch["mask"])
-        self.updates += 1
-        self.policy.set_params(params)
+        with obs.span("online.update", window=n, algo=cfg.algo):
+            batch = self.window.tail(n)
+            params = self.policy.params
+            for _ in range(cfg.updates_per_step):
+                params, self._opt_state = self._update(n)(
+                    params, self._opt(params), batch["obs"],
+                    batch["actions"], batch["logp"], batch["reward"],
+                    batch["mask"])
+            self.updates += 1
+            self.policy.set_params(params)
+        obs.event("online.hotswap", epoch=epoch, updates=self.updates,
+                  window=n)
         return True
 
     # -- update machinery --------------------------------------------------
@@ -321,6 +330,7 @@ class OnlineLearner:
         @jax.jit
         def update(params, opt_state, obs, actions, old_logp, rewards,
                    mask):
+            jaxmon.count_trace("online.update")
             grads = jax.grad(loss_fn)(params, obs, actions, old_logp,
                                       rewards, mask)
             if not cfg.adapt_trunk:

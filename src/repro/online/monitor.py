@@ -20,6 +20,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core import pricing
 
 
@@ -83,6 +84,8 @@ class DriftMonitor:
         fired = self._ph.update(r)
         if fired:
             self.triggers += 1
+            obs.event("drift.trigger", level=self.level,
+                      residual=self.residual, n=self.triggers)
         return fired
 
 
@@ -148,6 +151,8 @@ class AdaptationTracker:
                                      start_epoch=epoch)
             self._regimes.append(self._cur)
             self._r_ewma = self._o_ewma = None
+            obs.event("drift.regime_enter", epoch=epoch, regime=regime,
+                      name=regime_name)
         st = self._cur
         st.rewards.append(float(reward))
         st.oracle.append(float(oracle_r))

@@ -46,15 +46,26 @@ class Policy:
         """Jitted ``act``, cached on the instance and re-traced whenever
         the trainable state changes (params swapped by train/load) — the
         fleet loop's per-epoch decide must not re-trace per call, and
-        must not serve stale baked-in params either."""
+        must not serve stale baked-in params either.
+
+        The traced body counts itself at ``decide.<name>`` in
+        ``repro.obs.jaxmon`` — the counter moves only when jit actually
+        (re-)traces, so retrace regressions at the fleet's hottest jit
+        site are measurable (tests/test_obs.py)."""
         import jax
+
+        from repro.obs import jaxmon
 
         token = self._cache_token()
         # identity comparison, and the token object itself is pinned on
         # the instance: an id()-style integer could be recycled by a
         # later allocation and silently serve stale compiled params
         if self._jit_fn is None or self._jit_token is not token:
-            self._jit_fn = jax.jit(lambda state, rng: self.act(state, rng))
+            def _act(state, rng):
+                jaxmon.count_trace(f"decide.{self.name}")
+                return self.act(state, rng)
+
+            self._jit_fn = jax.jit(_act)
             self._jit_token = token
         return self._jit_fn
 

@@ -118,6 +118,8 @@ class TrainablePolicy(Policy):
         are unchanged, a fresh object after any swap."""
         import jax
 
+        from repro.obs import jaxmon
+
         if self.params is None:
             raise RuntimeError(f"policy {self.name!r}: call train() or "
                                "load() before act()")
@@ -125,9 +127,14 @@ class TrainablePolicy(Policy):
         if self._jit_fn is None or self._jit_token is not token:
             eps = float(self.explore)
             if eps not in self._jit_cache:
-                self._jit_cache[eps] = jax.jit(
-                    lambda params, state, rng: self._act(params, state,
-                                                         rng, eps))
+                def _act(params, state, rng, _eps=eps):
+                    # trace-time counter: a param hot-swap re-binds the
+                    # compiled fn and must NOT move this (measured
+                    # invariant — tests/test_obs.py)
+                    jaxmon.count_trace(f"decide.{self.name}")
+                    return self._act(params, state, rng, _eps)
+
+                self._jit_cache[eps] = jax.jit(_act)
             fn = self._jit_cache[eps]
             self._jit_fn = lambda state, rng: fn(self.params, state, rng)
             self._jit_token = token

@@ -22,6 +22,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.policies import get_policy_spec
 from repro.scenarios.base import Scenario
 from repro.sim import FleetConfig, simulate
@@ -201,20 +202,24 @@ def run_scenario(scenario: Scenario,
         else scenario.n_requests
     eps = int(episodes) if episodes is not None else scenario.episodes
 
-    env_cfg, tables, model_ids, backend_factory = scenario.build_env()
-    trace = scenario.build_trace()
-    schedule = scenario.build_schedule()
+    with obs.span("scenario.build", scenario=scenario.name):
+        env_cfg, tables, model_ids, backend_factory = scenario.build_env()
+        trace = scenario.build_trace()
+        schedule = scenario.build_schedule()
     fleet = FleetConfig(slo_s=scenario.slo_s)
 
-    if verbose:
-        print(f"scenario {scenario.name}: {scenario.devices} devices "
-              f"({scenario.env} env), trace={trace.name} "
-              f"(mean {trace.mean_rps:.1f} rps/device), "
-              f"slo={scenario.slo_s}s, requests={n_req} x seeds "
-              f"{list(seeds)}"
-              + (f", drift={schedule.name} "
-                 f"(boundaries {list(schedule.boundaries)})"
-                 if schedule else ""))
+    # verbose routes the narration at info level (console by default,
+    # silenced by --quiet); non-verbose runs still record it at debug,
+    # so a traced run keeps its story in the JSONL either way
+    say = obs.info if verbose else obs.debug
+    say(f"scenario {scenario.name}: {scenario.devices} devices "
+        f"({scenario.env} env), trace={trace.name} "
+        f"(mean {trace.mean_rps:.1f} rps/device), "
+        f"slo={scenario.slo_s}s, requests={n_req} x seeds "
+        f"{list(seeds)}"
+        + (f", drift={schedule.name} "
+           f"(boundaries {list(schedule.boundaries)})"
+           if schedule else ""))
 
     results: Dict[str, PolicyResult] = {}
     trained_params: Dict[str, object] = {}   # base name -> pre-drift params
@@ -234,23 +239,20 @@ def run_scenario(scenario: Scenario,
                 # share a single pre-drift training run by construction
                 policy.set_params(trained_params[base])
                 loaded_from = loaded_from or f"(shared: {base})"
-                if verbose:
-                    print(f"{name}: sharing {base}'s trained parameters")
+                say(f"{name}: sharing {base}'s trained parameters")
             elif loaded_from:
                 policy.load(loaded_from)
-                if verbose:
-                    print(f"{name}: loaded artifact {loaded_from}")
+                say(f"{name}: loaded artifact {loaded_from}")
             else:
-                if verbose:
-                    print(f"{name}: training ({eps} episodes) ...",
-                          flush=True)
-                hist = policy.train(seed=scenario.train_seed,
-                                    trace=scenario.build_train_trace())
+                say(f"{name}: training ({eps} episodes) ...")
+                with obs.span("scenario.train", policy=name, episodes=eps):
+                    hist = policy.train(
+                        seed=scenario.train_seed,
+                        trace=scenario.build_train_trace())
                 trained = True
-                if verbose:
-                    last = np.mean([h["mean_reward"] for h in hist[-15:]])
-                    print(f"  trained: mean reward (last 15 episodes) = "
-                          f"{last:+.3f}")
+                last = np.mean([h["mean_reward"] for h in hist[-15:]])
+                say(f"  trained: mean reward (last 15 episodes) = "
+                    f"{last:+.3f}")
             shared = base in trained_params and not trained \
                 and (loaded_from or "").startswith("(shared")
             trained_params.setdefault(base, policy.params)
@@ -260,8 +262,7 @@ def run_scenario(scenario: Scenario,
                 saved_to = None      # the sibling entry owns the artifact
             if saved_to:
                 policy.save(saved_to)
-                if verbose:
-                    print(f"{name}: saved artifact {saved_to}")
+                say(f"{name}: saved artifact {saved_to}")
 
         online_cfg = scenario.build_online(
             algo=getattr(policy, "algo", "a2c")) if is_online else None
@@ -271,10 +272,12 @@ def run_scenario(scenario: Scenario,
             if is_online and snapshot is not None:
                 # every seed adapts from the same pre-drift parameters
                 policy.set_params(snapshot)
-            res = simulate(env_cfg, tables, policy, trace,
-                           n_requests=n_req, seed=seed, fleet=fleet,
-                           backend=backend_factory(), model_ids=model_ids,
-                           schedule=schedule, online=online_cfg)
+            with obs.span("scenario.simulate", policy=name, seed=seed):
+                res = simulate(env_cfg, tables, policy, trace,
+                               n_requests=n_req, seed=seed, fleet=fleet,
+                               backend=backend_factory(),
+                               model_ids=model_ids,
+                               schedule=schedule, online=online_cfg)
             per_seed.append(res.summary)
             if res.adaptation is not None:
                 per_adapt.append(res.adaptation)
@@ -287,17 +290,16 @@ def run_scenario(scenario: Scenario,
             name=name, mean=mean, per_seed=per_seed, trained=trained,
             loaded_from=loaded_from, saved_to=saved_to, cross_check=cross,
             adaptation=_mean_adaptation(per_adapt) if per_adapt else None)
-        if verbose:
-            if not header_printed:
-                print("\n" + _TABLE_HEADER)
-                header_printed = True
-            print(results[name].row())
+        if not header_printed:
+            say("\n" + _TABLE_HEADER)
+            header_printed = True
+        say(results[name].row())
 
     report = ComparisonReport(scenario=scenario.name, seeds=seeds,
                               n_requests=n_req, trace=trace.name,
                               results=results,
                               schedule=schedule.name if schedule else None)
-    if verbose and schedule:
-        print("\nadaptation metrics (per regime):")
-        print(report.adaptation_table())
+    if schedule:
+        say("\nadaptation metrics (per regime):")
+        say(report.adaptation_table())
     return report

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core import pricing
 from repro.core.env import EnvConfig, ProfileTables
 from repro.core.pricing import PricingBreakdown, StateView
@@ -47,13 +48,14 @@ class AnalyticalBackend:
         """One pricing core, numpy namespace. The view carries queue=0 —
         the fleet loop adds its own *measured* server wait per epoch —
         and load=0 (the stability score is a training-time signal)."""
-        view = StateView(
-            model_id=np.asarray(model_id),
-            bandwidth=np.asarray(bandwidth, dtype=np.float64),
-            p_tx=np.asarray(p_tx, dtype=np.float64),
-            queue=0.0, load=0.0)
-        return pricing.price_actions(self.env_cfg, self._np_tables, view,
-                                     np.asarray(actions), xp=np)
+        with obs.span("pricing.analytical", n=len(np.asarray(model_id))):
+            view = StateView(
+                model_id=np.asarray(model_id),
+                bandwidth=np.asarray(bandwidth, dtype=np.float64),
+                p_tx=np.asarray(p_tx, dtype=np.float64),
+                queue=0.0, load=0.0)
+            return pricing.price_actions(self.env_cfg, self._np_tables,
+                                         view, np.asarray(actions), xp=np)
 
     # the analytical backend executes nothing; the fleet loop calls this
     # hook unconditionally so both backends share one interface
@@ -145,12 +147,14 @@ class ExecuteBackend(AnalyticalBackend):
         version, cut = resolve_selection(cfg, prof, int(j), int(k))
         eng = self._engines[model_idx]
         batch = self._batches[model_idx]
-        logits, _ = eng.infer(batch, cut, version)       # warm (compile)
-        jax.block_until_ready(logits)
-        t0 = time.perf_counter()
-        logits, measured_bytes = eng.infer(batch, cut, version)
-        jax.block_until_ready(logits)
-        wall_s = time.perf_counter() - t0
+        with obs.span("pricing.execute", model=cfg.name, version=version,
+                      cut=str(cut)):
+            logits, _ = eng.infer(batch, cut, version)   # warm (compile)
+            jax.block_until_ready(logits)
+            t0 = time.perf_counter()
+            logits, measured_bytes = eng.infer(batch, cut, version)
+            jax.block_until_ready(logits)
+            wall_s = time.perf_counter() - t0
         # expected compute time from the same PricingBreakdown the fleet
         # prices with: head + tail model-seconds for this (j, k); the
         # engine runs both halves on this host, so no link/queue terms

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core import energy as en
 from repro.core.env import EnvConfig, ProfileTables
 from repro.sim.backends import AnalyticalBackend
@@ -189,6 +190,7 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
     t_now = 0.0
 
     while served < n_requests and epoch < fleet.max_epochs:
+      with obs.span("fleet.epoch", epoch=epoch, regime=regime_idx):
         counts = np.asarray(next(stream), dtype=np.int64)
 
         # -- regime switch (epoch-clock driven, policy-independent) --------
@@ -196,6 +198,8 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
             r = schedule.regime_at(epoch)
             if r != regime_idx:
                 regime_idx, reg = r, regimes[r]
+                obs.event("drift.regime_switch", epoch=epoch,
+                          regime=regime_idx, name=reg.name)
                 phys = reg.env_cfg
                 lp, pw = phys.latency, phys.power
                 phys_backend = backend if phys is cfg \
@@ -225,12 +229,13 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
         load = np.clip(obs_rate / norm_rps, 0.0, 1.0)
 
         # 1) decide from measured state (obs normalization: base regime)
-        state = measured_state(
-            cfg, tables, battery_j=battery, bandwidth=bw, p_tx=p_tx,
-            queue_jobs=obs_queue, load=load,
-            model_id=model_ids, activity=activity, t=epoch)
-        jkey, k_pol = jax.random.split(jkey)
-        actions = np.asarray(policy.jitted()(state, k_pol))
+        with obs.span("fleet.decide", policy=policy.name):
+            state = measured_state(
+                cfg, tables, battery_j=battery, bandwidth=bw, p_tx=p_tx,
+                queue_jobs=obs_queue, load=load,
+                model_id=model_ids, activity=activity, t=epoch)
+            jkey, k_pol = jax.random.split(jkey)
+            actions = np.asarray(policy.jitted()(state, k_pol))
 
         # 2) price this epoch's actions under the current regime
         pr = phys_backend.price(model_ids, actions, bw, p_tx)
@@ -240,7 +245,8 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
         dropped = 0
         slo_hits = 0
         executed = False
-        for d in range(n):
+        with obs.span("fleet.queues"):
+          for d in range(n):
             c = int(counts[d])
             if c == 0:
                 continue
@@ -275,6 +281,7 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
         # reward (Eq. 8 over the measured view) priced under the CURRENT
         # regime, and the greedy oracle re-solved under the same regime
         if tracker is not None:
+          with obs.span("fleet.adapt"):
             view = pricing.StateView(
                 model_id=model_ids, bandwidth=bw, p_tx=p_tx,
                 queue=obs_queue, load=load)
@@ -297,27 +304,34 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
 
         # 4) world dynamics (mirrors env_step, on the world rng, under
         #    the current regime's latency/power bounds)
-        kin_p = np.asarray(en.kinetic_power(pw, activity[:, 0],
-                                            activity[:, 1], activity[:, 2]))
-        drain = np.where(alive, kin_p * cfg.slot_seconds
-                         + counts * pr.energy_j, 0.0)
-        battery = np.maximum(battery - drain, 0.0)
-        bw = np.clip(bw * np.exp(w_rng.normal(size=n) * 0.15),
-                     lp.bw_min_bps, lp.bw_max_bps)
-        p_tx = np.clip(p_tx + w_rng.normal(size=n) * 0.05,
-                       pw.p_tx_min, pw.p_tx_max)
-        activity = np.clip(activity + w_rng.normal(size=(n, 3))
-                           * cfg.activity_jitter, 0.0, 1.0)
-        activity /= np.maximum(activity.sum(-1, keepdims=True), 1.0)
-        side_queue = max(side_queue
-                         + float(w_rng.poisson(phys.queue_arrival_rate))
-                         - phys.queue_service_per_slot, 0.0)
-        backlog_s = max(backlog_s + tail_in_s - cfg.slot_seconds, 0.0)
-        obs_rate = (1.0 - fleet.ewma) * obs_rate \
-            + fleet.ewma * counts / cfg.slot_seconds
+        with obs.span("fleet.dynamics"):
+            kin_p = np.asarray(en.kinetic_power(pw, activity[:, 0],
+                                                activity[:, 1],
+                                                activity[:, 2]))
+            drain = np.where(alive, kin_p * cfg.slot_seconds
+                             + counts * pr.energy_j, 0.0)
+            battery = np.maximum(battery - drain, 0.0)
+            bw = np.clip(bw * np.exp(w_rng.normal(size=n) * 0.15),
+                         lp.bw_min_bps, lp.bw_max_bps)
+            p_tx = np.clip(p_tx + w_rng.normal(size=n) * 0.05,
+                           pw.p_tx_min, pw.p_tx_max)
+            activity = np.clip(activity + w_rng.normal(size=(n, 3))
+                               * cfg.activity_jitter, 0.0, 1.0)
+            activity /= np.maximum(activity.sum(-1, keepdims=True), 1.0)
+            side_queue = max(side_queue
+                             + float(w_rng.poisson(phys.queue_arrival_rate))
+                             - phys.queue_service_per_slot, 0.0)
+            backlog_s = max(backlog_s + tail_in_s - cfg.slot_seconds, 0.0)
+            obs_rate = (1.0 - fleet.ewma) * obs_rate \
+                + fleet.ewma * counts / cfg.slot_seconds
 
         served += int(counts.sum())
         t_now += cfg.slot_seconds
+        obs.inc("fleet.arrivals", int(counts.sum()), policy=policy.name)
+        if dropped:
+            obs.inc("fleet.dropped", dropped, policy=policy.name)
+        obs.inc("fleet.slo_hits", slo_hits, policy=policy.name)
+        obs.observe("fleet.queue_jobs", queue_jobs, policy=policy.name)
         if fleet.record_epochs:
             epoch_log.append({
                 "epoch": epoch, "arrivals": int(counts.sum()),
