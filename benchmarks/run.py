@@ -1,7 +1,11 @@
 """Benchmark harness — one function per paper table/figure (+ system
-benches). Prints ``name,us_per_call,derived`` CSV rows and writes the
-same rows as machine-readable JSON (``--json``, default
-BENCH_results.json) so CI can archive a perf trajectory.
+benches), declared as a ``repro.bench`` case matrix. Prints
+``name,us_per_call,derived`` CSV rows and writes the same rows as
+machine-readable JSON (``--json``, default BENCH_results.json) with
+repeated samples, bootstrap CI bounds, per-case obs phase breakdowns,
+the git sha and an environment fingerprint — the record
+``scripts/benchgate.py`` gates against ``BENCH_history.jsonl``
+(DESIGN.md §10).
 
 Paper artifacts:
   table1_profiles       — Table I: candidate cut points + activation bytes
@@ -39,51 +43,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-ROWS = []
-RECORDS = []
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
 
+from repro.bench import Matrix, Timing, history, runner, timeit
 
-class Timing(float):
-    """us-per-call headline number (min over repetitions — least noise)
-    that still *is* a float for every existing format/arithmetic site,
-    carrying the per-repetition samples for the JSON records."""
-
-    samples: tuple = ()
-
-    def __new__(cls, value, samples=()):
-        t = super().__new__(cls, value)
-        t.samples = tuple(float(s) for s in samples) or (float(value),)
-        return t
-
-
-def row(name: str, us_per_call: float, derived: str):
-    line = f"{name},{us_per_call:.1f},{derived}"
-    ROWS.append(line)
-    samples = getattr(us_per_call, "samples", (float(us_per_call),))
-    RECORDS.append({"name": name,
-                    "us_per_call": round(float(us_per_call), 1),
-                    "derived": derived,
-                    "samples": len(samples),
-                    "min": round(min(samples), 1),
-                    "mean": round(float(np.mean(samples)), 1),
-                    "std": round(float(np.std(samples)), 1)})
-    print(line, flush=True)
-
-
-def _timeit(fn, n=5, reps=3):
-    """Median-free repeated timing: ``reps`` back-to-back repetitions of
-    an ``n``-call loop, each yielding one us-per-call sample; returns a
-    ``Timing`` (min sample) so ``row`` can report samples/min/mean/std."""
-    out = fn()  # warmup/compile
-    jax.block_until_ready(out)
-    samples = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        for _ in range(n):
-            out = fn()
-        jax.block_until_ready(out)
-        samples.append((time.perf_counter() - t0) / n * 1e6)
-    return Timing(min(samples), samples)
+# rows flow through the active repro.bench.runner sink (CSV echo + the
+# structured record benchgate consumes); Timing/_timeit live in
+# repro.bench.stats now — same semantics, 5 samples by default
+row = runner.emit
+_timeit = timeit
 
 
 # --------------------------------------------------------------------------
@@ -386,14 +355,19 @@ def scheduler_throughput():
     one_run()                       # warm the jits
     warm_reclaims = srv.stats.slot_reclaims
     warm_prefills = srv.stats.prefills
-    t0 = time.perf_counter()
-    toks = one_run()
-    dt = time.perf_counter() - t0
+    samples, toks, dt = [], 0, 0.0
+    for rep in range(3):            # repeated runs: the gate's noise model
+        t0 = time.perf_counter()
+        toks = one_run()
+        dt = time.perf_counter() - t0
+        samples.append(dt / max(toks, 1) * 1e6)
+        if rep == 0:
+            reclaims = srv.stats.slot_reclaims - warm_reclaims
+            prefills = srv.stats.prefills - warm_prefills
     summ = srv.stats.latency_summary()
-    row("scheduler_throughput", dt / max(toks, 1) * 1e6,
+    row("scheduler_throughput", Timing(min(samples), samples),
         f"per_token,tok_per_s={toks/dt:.0f} "
-        f"reclaims={srv.stats.slot_reclaims - warm_reclaims} "
-        f"prefills={srv.stats.prefills - warm_prefills} "
+        f"reclaims={reclaims} prefills={prefills} "
         f"p95_e2e_steps={summ['p95']:.0f}")
 
 
@@ -435,9 +409,10 @@ def train_throughput(loop_episodes=16, batch_envs=16):
         f"looped_us_per_ep={us_loop*1e6:.0f}")
 
 
-def pricing_numpy_throughput(n_devices=4096, iters=200):
+def pricing_numpy_throughput(n_devices=4096, iters=200, reps=5):
     """Actions/s through the numpy pricing path (the fleet simulator's
-    per-epoch hot loop: one price_actions call per decision epoch)."""
+    per-epoch hot loop: one price_actions call per decision epoch).
+    Timed in ``reps`` chunks so the gate has a noise model."""
     from repro.core import make_paper_env
     from repro.sim import AnalyticalBackend
     cfg, tables = make_paper_env()
@@ -450,39 +425,43 @@ def pricing_numpy_throughput(n_devices=4096, iters=200):
     lp, pw = cfg.latency, cfg.power
     bw = r.uniform(lp.bw_min_bps, lp.bw_max_bps, n_devices)
     ptx = r.uniform(pw.p_tx_min, pw.p_tx_max, n_devices)
-    be.price(mids, acts, bw, ptx)                        # warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        pr = be.price(mids, acts, bw, ptx)
-    dt = time.perf_counter() - t0
+    pr = be.price(mids, acts, bw, ptx)                   # warm
     assert isinstance(pr.t_total, np.ndarray)
-    row("pricing_numpy_throughput", dt / iters * 1e6,
+    chunk = max(iters // reps, 1)
+    us = _timeit(lambda: be.price(mids, acts, bw, ptx),
+                 n=chunk, reps=reps, warmup=1)
+    row("pricing_numpy_throughput", us,
         f"per_call,devices={n_devices} "
-        f"actions_per_s={n_devices*iters/dt:.0f}")
+        f"actions_per_s={n_devices/us*1e6:.0f}")
 
 
-def fleet_sim(n_requests=100_000):
-    """repro.sim throughput: analytical-backend requests/s + epochs/s."""
+def fleet_sim(n_requests=100_000, n_uavs=8, reps=3):
+    """repro.sim throughput: analytical-backend requests/s + epochs/s,
+    parameterized over fleet size (the devices/sec scaling curve the
+    mega-fleet roadmap item tracks)."""
     from repro.core import make_paper_env
     from repro.policies import build_policy
     from repro.sim import FleetConfig, PoissonTrace, simulate
-    cfg, tables = make_paper_env(n_uavs=8, slot_seconds=10.0)
+    cfg, tables = make_paper_env(n_uavs=n_uavs, slot_seconds=10.0)
     trace = PoissonTrace(rate_rps=15.0)
     pol = build_policy("greedy_oracle", cfg, tables)
     kw = dict(n_requests=n_requests, seed=0, fleet=FleetConfig(slo_s=1.0))
     simulate(cfg, tables, pol, trace, **kw)  # warm
     samples, dts = [], []
-    for _ in range(3):      # same seed: identical epochs each repetition
+    for _ in range(reps):   # same seed: identical epochs each repetition
         t0 = time.perf_counter()
         res = simulate(cfg, tables, pol, trace, **kw)
         dts.append(time.perf_counter() - t0)
         samples.append(dts[-1] / max(res.epochs, 1) * 1e6)
     dt = min(dts)
     s = res.summary
-    row("fleet_sim", Timing(min(samples), samples),
+    name = "fleet_sim" if n_uavs == 8 else f"fleet_sim[n_uavs={n_uavs}]"
+    row(name, Timing(min(samples), samples),
         f"per_epoch,req_per_s={res.served/dt:.0f} epochs_per_s="
         f"{res.epochs/dt:.1f} requests={res.served} "
-        f"p95_s={s['p95']:.3f} slo_att={s['slo_attainment']:.3f}")
+        f"p95_s={s['p95']:.3f} slo_att={s['slo_attainment']:.3f}",
+        devices=n_uavs,
+        devices_per_s=n_uavs * res.epochs / dt)
 
 
 def scenario_sweep(n_requests=2000):
@@ -616,19 +595,38 @@ def quant_matmul(M=512, K=512, N=512):
     row("quant_matmul_interpret", us_pl, f"MKN={M},CPU_interpret_mode")
 
 
-ALL = [table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
-       fig4_energy_sweep, table2_cut_selection, baseline_policies,
-       a2c_convergence, ablation_a2c, ablation_agents, roofline_suite,
-       hillclimb_variants,
-       serving_decode, split_inference, continuous_batching,
-       scheduler_throughput, fleet_sim, scenario_sweep, train_throughput,
-       pricing_numpy_throughput, online_adaptation,
-       kernels_interpret, quant_matmul]
+def build_matrix() -> Matrix:
+    """The declarative case matrix (replaces the hand-rolled ALL-list
+    dispatch): paper artifacts, system benches, and the fleet-size axis
+    behind the devices/sec scaling curve."""
+    m = Matrix()
+    for fn in (table1_profiles, fig2_accuracy_sweep, fig3_latency_sweep,
+               fig4_energy_sweep, table2_cut_selection, baseline_policies,
+               a2c_convergence, ablation_a2c, ablation_agents):
+        m.add(fn, tags=("paper",))
+    for fn in (roofline_suite, hillclimb_variants, serving_decode,
+               split_inference, continuous_batching):
+        m.add(fn, tags=("system",))
+    m.add(scheduler_throughput, tags=("system", "smoke"))
+    m.add(fleet_sim, tags=("system", "smoke"),
+          axes={"n_uavs": (8, 64, 256)})
+    m.add(scenario_sweep, tags=("system",))
+    m.add(train_throughput, tags=("system", "smoke"))
+    m.add(pricing_numpy_throughput, tags=("system", "smoke"))
+    m.add(online_adaptation, tags=("system",))
+    m.add(kernels_interpret, tags=("system", "smoke"))
+    m.add(quant_matmul, tags=("system", "smoke"))
+    return m
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma-separated names")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated group or case names "
+                    "(e.g. fleet_sim or fleet_sim[n_uavs=64])")
+    ap.add_argument("--tags", default=None,
+                    help="comma-separated tag filter (paper, system, "
+                    "smoke)")
     ap.add_argument("--agent", action="store_true",
                     help="run sweeps with trained A2C agents (slow)")
     ap.add_argument("--episodes", type=int, default=200)
@@ -638,44 +636,34 @@ def main() -> None:
                     help="record obs events (spans, metrics, retrace "
                     "accounting) for the benched runs to a JSONL file")
     args = ap.parse_args()
-    known = {fn.__name__ for fn in ALL}
-    selected = args.only.split(",") if args.only else None
-    if selected:
-        unknown = sorted(set(selected) - known)
-        if unknown:
-            ap.error(f"unknown benchmark(s) {unknown}; known: {sorted(known)}")
-    import contextlib
-
-    from repro import obs
-    rec_ctx = obs.recording(args.trace, meta={"tool": "benchmarks",
-                                              "argv": sys.argv[1:]}) \
-        if args.trace else contextlib.nullcontext()
-    print("name,us_per_call,derived")
-    errors = 0
-    with rec_ctx:
-        for fn in ALL:
-            if selected and fn.__name__ not in selected:
-                continue
-            kw = {}
-            if fn.__name__ in ("fig2_accuracy_sweep", "fig3_latency_sweep",
-                               "fig4_energy_sweep", "table2_cut_selection"):
-                kw = dict(use_agent=args.agent, episodes=args.episodes)
-            elif fn.__name__ == "a2c_convergence":
-                kw = dict(episodes=args.episodes)
-            try:
-                with obs.span("bench", name=fn.__name__):
-                    fn(**kw)
-            except Exception as e:   # noqa: BLE001 - report, keep benching
-                row(fn.__name__, -1.0, f"ERROR={type(e).__name__}:{e}")
-                errors += 1
+    matrix = build_matrix()
+    try:
+        cases = matrix.select(
+            only=args.only.split(",") if args.only else None,
+            tags=args.tags.split(",") if args.tags else None)
+    except KeyError as e:
+        ap.error(str(e))
+    overrides = {
+        "a2c_convergence": dict(episodes=args.episodes),
+        **{name: dict(use_agent=args.agent, episodes=args.episodes)
+           for name in ("fig2_accuracy_sweep", "fig3_latency_sweep",
+                        "fig4_energy_sweep", "table2_cut_selection")},
+    }
+    t_unix = time.time()
+    result = runner.run(cases, trace=args.trace,
+                        meta={"tool": "benchmarks", "argv": sys.argv[1:]},
+                        overrides=overrides)
     if args.json:
         import json
         with open(args.json, "w") as f:
-            json.dump({"schema": 1, "unix_time": time.time(),
-                       "argv": sys.argv[1:], "errors": errors,
-                       "rows": RECORDS}, f, indent=2)
-        print(f"wrote {args.json} ({len(RECORDS)} rows)", flush=True)
-    if errors:
+            json.dump({"schema": 2, "unix_time": t_unix,
+                       "argv": sys.argv[1:], "errors": result.errors,
+                       "git_sha": history.git_sha(),
+                       "fingerprint": history.fingerprint(),
+                       "rows": result.records}, f, indent=2)
+        print(f"wrote {args.json} ({len(result.records)} rows)",
+              flush=True)
+    if result.errors:
         raise SystemExit(1)   # make ERROR rows visible to CI
 
 

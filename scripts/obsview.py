@@ -8,6 +8,10 @@ drift/online timeline, metrics and JAX compile/retrace accounting.
 
     # machine-readable folded report alongside the text view
     PYTHONPATH=src python scripts/obsview.py events.jsonl --json obs.json
+
+    # or JSON only, to stdout (what the bench gate / CI consumes
+    # instead of scraping the printed table)
+    PYTHONPATH=src python scripts/obsview.py events.jsonl --json -
 """
 from __future__ import annotations
 
@@ -29,13 +33,19 @@ def main():
     ap.add_argument("events", help="obs JSONL trace (simulate.py "
                     "--trace-out / benchmarks/run.py --trace)")
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write the folded report as JSON")
+                    help="also write the folded report as JSON "
+                    "('-' = JSON only, to stdout — machine-readable "
+                    "for the bench gate / CI)")
     args = ap.parse_args()
 
     try:
         rep = obs_report.load(args.events)
     except (OSError, ValueError) as e:
         raise SystemExit(f"obsview: {e}")
+    if args.json == "-":
+        json.dump(rep, sys.stdout, indent=2, default=str)
+        print()
+        return
     print(obs_report.render(rep))
     if args.json:
         with open(args.json, "w") as f:

@@ -1,0 +1,41 @@
+"""repro.bench — variance-aware perf harness with regression gating.
+
+The perf trajectory is an observable: benchmarks declare a case matrix
+(``matrix``), the runner executes it under ``repro.obs`` recording with
+per-case phase breakdowns (``runner``), timings carry repeated samples
+with a robust noise model (``stats``), every run appends
+fingerprint-stamped rows to ``BENCH_history.jsonl`` (``history``), and
+the gate (``gate`` + ``scripts/benchgate.py``) fails CI on
+statistically significant regressions — naming the regressed obs
+*phase*, not just the case. See DESIGN.md §10.
+
+    # 1. measure (benchmarks/run.py rides this package)
+    PYTHONPATH=src python benchmarks/run.py --only fleet_sim \
+        --json BENCH_results.json
+    # 2. gate vs history (and append this run)
+    PYTHONPATH=src python scripts/benchgate.py BENCH_results.json \
+        --history BENCH_history.jsonl
+"""
+from repro.bench.gate import (CaseVerdict, GateReport, attribute_phase,
+                              gate_records, render)
+from repro.bench.history import (Baseline, append, baseline_for,
+                                 fingerprint, fp_key, git_sha, load,
+                                 stamp)
+from repro.bench.matrix import Case, Matrix
+from repro.bench.runner import RunResult, Sink, emit, fold_phases, run
+from repro.bench.stats import (Comparison, SampleStats, Timing,
+                               bootstrap_ci, compare, format_sig,
+                               mann_whitney_u, reject_outliers,
+                               summarize, timeit)
+
+__all__ = [
+    "Matrix", "Case",
+    "Timing", "timeit", "SampleStats", "summarize", "reject_outliers",
+    "bootstrap_ci", "mann_whitney_u", "compare", "Comparison",
+    "format_sig",
+    "Sink", "emit", "run", "RunResult", "fold_phases",
+    "fingerprint", "fp_key", "git_sha", "append", "load", "stamp",
+    "baseline_for", "Baseline",
+    "gate_records", "GateReport", "CaseVerdict", "attribute_phase",
+    "render",
+]

@@ -16,6 +16,7 @@ fleet prices with.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -31,6 +32,13 @@ from repro.core.pricing import PricingBreakdown, StateView
 # same action); per-request variability comes from the fleet loop's
 # queueing recursion. Alias kept for API compatibility.
 RequestPricing = PricingBreakdown
+
+# Fault injection for validating the perf gate (DESIGN.md §10): a
+# nonzero REPRO_CHAOS_PRICING_SLEEP_S sleeps that long inside every
+# analytical pricing call, so `scripts/benchgate.py` can be shown to
+# fail the regressed case AND attribute it to the pricing.analytical
+# phase. Never set outside gate acceptance runs.
+_CHAOS_SLEEP = float(os.environ.get("REPRO_CHAOS_PRICING_SLEEP_S", 0) or 0)
 
 
 class AnalyticalBackend:
@@ -49,6 +57,8 @@ class AnalyticalBackend:
         the fleet loop adds its own *measured* server wait per epoch —
         and load=0 (the stability score is a training-time signal)."""
         with obs.span("pricing.analytical", n=len(np.asarray(model_id))):
+            if _CHAOS_SLEEP:
+                time.sleep(_CHAOS_SLEEP)
             view = StateView(
                 model_id=np.asarray(model_id),
                 bandwidth=np.asarray(bandwidth, dtype=np.float64),

@@ -1,0 +1,330 @@
+"""repro.bench: noise model, matrix, history and gate.
+
+The acceptance triangle from the issue: an injected 2x slowdown must be
+flagged, pure jitter at realistic CV must pass, and a fingerprint
+mismatch must refuse to gate. Plus: error rows never poison baselines,
+the gate names the dominant regressed obs phase, and the runner's
+records carry samples/CI/phases end-to-end.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.bench import (Matrix, Timing, baseline_for, bootstrap_ci,
+                         compare, fingerprint, format_sig, gate_records,
+                         mann_whitney_u, reject_outliers, render, stamp,
+                         summarize, timeit)
+from repro.bench import history as bhist
+from repro.bench import runner as brunner
+from repro.bench.gate import attribute_phase
+
+FP = fingerprint()
+
+
+def _samples(rng, mean_us, cv=0.05, n=5):
+    """Realistic timing stream: lognormal-ish positive jitter."""
+    return list(np.abs(rng.normal(mean_us, cv * mean_us, size=n)))
+
+
+# --------------------------------------------------------------------------
+# stats
+# --------------------------------------------------------------------------
+
+class TestStats:
+    def test_timing_is_float_and_scales_samples(self):
+        t = Timing(10.0, [10.0, 12.0, 11.0])
+        assert float(t) == 10.0 and t.samples == (10.0, 12.0, 11.0)
+        half = t / 2
+        assert isinstance(half, Timing)
+        assert half.samples == (5.0, 6.0, 5.5)
+        assert (t * 3).samples == (30.0, 36.0, 33.0)
+        assert f"{t:.1f}" == "10.0"          # format sites still work
+
+    def test_timeit_collects_reps(self):
+        t = timeit(lambda: sum(range(100)), n=3, reps=4)
+        assert len(t.samples) == 4
+        assert float(t) == min(t.samples) > 0
+
+    def test_format_sig(self):
+        assert format_sig(0.03125) == 0.03125
+        assert format_sig(1408.217) == 1408.0
+        assert format_sig(0.000123456) == 0.0001235
+        assert format_sig(0.0) == 0.0
+
+    def test_reject_outliers_drops_scheduler_spike(self):
+        xs = [100.0, 101.0, 99.0, 100.5, 1000.0]
+        kept = reject_outliers(xs)
+        assert 1000.0 not in kept and len(kept) == 4
+        # small streams pass through untouched
+        assert reject_outliers([1.0, 50.0]) == [1.0, 50.0]
+        # identical samples: degenerate MAD must not divide by zero
+        assert reject_outliers([5.0] * 6) == [5.0] * 6
+
+    def test_bootstrap_ci_covers_median_and_is_deterministic(self):
+        rng = np.random.default_rng(0)
+        xs = _samples(rng, 100.0, cv=0.05, n=20)
+        lo, hi = bootstrap_ci(xs)
+        assert lo <= float(np.median(xs)) <= hi
+        assert (lo, hi) == bootstrap_ci(xs)   # seeded
+        assert bootstrap_ci([7.0]) == (7.0, 7.0)
+
+    def test_summarize(self):
+        s = summarize([100.0, 102.0, 98.0, 101.0, 5000.0])
+        assert s.n == 4 and s.n_raw == 5      # spike rejected
+        assert 98.0 <= s.median <= 102.0
+        assert s.cv < 0.05
+
+    def test_mann_whitney_separated_vs_null(self):
+        rng = np.random.default_rng(1)
+        a = _samples(rng, 100.0, n=8)
+        b = _samples(rng, 200.0, n=8)
+        assert mann_whitney_u(a, b) < 0.01    # b clearly slower
+        assert mann_whitney_u(b, a) > 0.9
+        same = _samples(rng, 100.0, n=8)
+        assert mann_whitney_u(a, same) > 0.05
+        # normal-approximation branch agrees on a big separated stream
+        big_a = _samples(rng, 100.0, n=200)
+        big_b = _samples(rng, 150.0, n=200)
+        assert mann_whitney_u(big_a, big_b) < 1e-6
+
+
+class TestCompareRule:
+    """The gate's decision rule on synthetic sample streams."""
+
+    def test_injected_2x_slowdown_is_flagged(self):
+        rng = np.random.default_rng(2)
+        base = _samples(rng, 100.0, cv=0.05, n=15)   # pooled baseline
+        cur = _samples(rng, 200.0, cv=0.05, n=5)     # 2x regression
+        c = compare(base, cur)
+        assert c.verdict == "regression"
+        assert c.effect > 0.8 and c.p_slower < 0.05
+
+    def test_pure_jitter_at_realistic_cv_passes(self):
+        rng = np.random.default_rng(3)
+        for _ in range(20):       # no false regression across reruns
+            base = _samples(rng, 100.0, cv=0.08, n=15)
+            cur = _samples(rng, 100.0, cv=0.08, n=5)
+            assert compare(base, cur).verdict != "regression"
+
+    def test_tiny_but_significant_shift_passes(self):
+        # +3% with vanishing variance: maximally significant, but below
+        # the minimum-effect threshold -> must NOT fail CI
+        base = [100.0 + 0.01 * i for i in range(20)]
+        cur = [103.0 + 0.01 * i for i in range(10)]
+        c = compare(base, cur, min_effect=0.10)
+        assert c.p_slower < 0.05 and c.verdict == "ok"
+
+    def test_improvement_and_insufficient(self):
+        rng = np.random.default_rng(4)
+        base = _samples(rng, 200.0, n=15)
+        cur = _samples(rng, 100.0, n=5)
+        assert compare(base, cur).verdict == "improved"
+        assert compare(base, cur[:2]).verdict == "insufficient"
+        assert compare(base[:2], cur).verdict == "insufficient"
+
+
+# --------------------------------------------------------------------------
+# matrix
+# --------------------------------------------------------------------------
+
+class TestMatrix:
+    def _noop(self, **kw):
+        return None
+
+    def test_axes_expansion_and_select(self):
+        m = Matrix()
+        m.add(self._noop, name="solo", tags=("smoke",))
+        m.add(self._noop, name="fleet", axes={"n": (8, 64)},
+              tags=("system",))
+        names = [c.name for c in m.cases()]
+        assert names == ["solo", "fleet[n=8]", "fleet[n=64]"]
+        assert [c.params for c in m.cases()][1:] == [{"n": 8}, {"n": 64}]
+        assert [c.name for c in m.select(only=["fleet"])] == \
+            ["fleet[n=8]", "fleet[n=64]"]
+        assert [c.name for c in m.select(only=["fleet[n=64]"])] == \
+            ["fleet[n=64]"]
+        assert [c.name for c in m.select(tags=["smoke"])] == ["solo"]
+
+    def test_lazy_axis_and_unknown_name(self):
+        m = Matrix()
+        m.add(self._noop, name="sc", axes={"scenario": lambda: ["a", "b"]})
+        assert [c.name for c in m.cases()] == \
+            ["sc[scenario=a]", "sc[scenario=b]"]
+        with pytest.raises(KeyError, match="unknown benchmark"):
+            m.select(only=["nope"])
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+class TestRunner:
+    def test_records_phases_and_error_encoding(self, capsys):
+        m = Matrix()
+
+        def good():
+            with obs.span("work.inner"):
+                time.sleep(0.002)
+            brunner.emit("good", Timing(5.0, [5.0, 6.0, 5.5]), "d=1",
+                         devices=4, devices_per_s=123.4)
+
+        def bad():
+            raise ValueError("boom, with comma\nand newline")
+
+        m.add(good)
+        m.add(bad)
+        res = brunner.run(m.cases(), echo=False)
+        assert res.errors == 1
+        g, b = res.records
+        assert g["name"] == "good" and g["case"] == "good"
+        assert g["samples"] == [5.0, 6.0, 5.5] and g["n"] == 3
+        assert g["ci_lo"] <= g["median"] <= g["ci_hi"]
+        assert "work.inner" in g["phases"]
+        assert g["phases"]["work.inner"]["count"] == 1
+        assert g["phases"]["work.inner"]["total_s"] >= 0.002
+        assert "bench" not in g["phases"]
+        assert g["extra"] == {"devices": 4, "devices_per_s": 123.4}
+        # error rows: no timing fields at all, sanitized message
+        assert set(b) == {"name", "error", "case"}
+        assert "," not in b["error"] and "\n" not in b["error"]
+        # null recorder restored after the run
+        assert not obs.get_recorder().enabled
+
+
+# --------------------------------------------------------------------------
+# history
+# --------------------------------------------------------------------------
+
+def _hist_rows(rng, runs=3, mean=100.0, name="case_a", fp=None,
+               phases=None):
+    rows = []
+    for i in range(runs):
+        rec = {"name": name, "us_per_call": mean,
+               "samples": _samples(rng, mean, n=5)}
+        if phases:
+            rec["phases"] = phases
+        rows += stamp([rec], run_id=f"r{i}", t_unix=float(i),
+                      sha=f"sha{i}", fp=fp or FP)
+    return rows
+
+
+class TestHistory:
+    def test_roundtrip_and_stamp(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        rng = np.random.default_rng(5)
+        rows = _hist_rows(rng, runs=2)
+        bhist.append(str(p), rows[:1])
+        bhist.append(str(p), rows[1:])       # append-only across calls
+        back = bhist.load(str(p))
+        assert back == rows
+        assert back[0]["git_sha"] == "sha0"
+        assert back[0]["fingerprint"] == FP
+        assert bhist.load(str(tmp_path / "missing.jsonl")) == []
+
+    def test_baseline_pools_recent_matching_runs(self):
+        rng = np.random.default_rng(6)
+        rows = _hist_rows(rng, runs=5)
+        b = baseline_for("case_a", FP, rows, pool=3)
+        assert len(b.rows) == 3 and len(b.samples) == 15
+        assert b.shas == ["sha2", "sha3", "sha4"]   # newest three
+
+    def test_error_rows_never_poison_baselines(self):
+        rows = stamp([{"name": "case_a", "error": "ValueError: boom"}],
+                     run_id="r0", t_unix=0.0, sha="s", fp=FP)
+        assert baseline_for("case_a", FP, rows) is None
+        # ... and a -1.0-style record without samples doesn't either
+        rows = stamp([{"name": "case_a", "us_per_call": -1.0}],
+                     run_id="r0", t_unix=0.0, sha="s", fp=FP)
+        assert baseline_for("case_a", FP, rows) is None
+
+    def test_fingerprint_mismatch_yields_no_baseline(self):
+        rng = np.random.default_rng(7)
+        other = dict(FP, host="other-host")
+        rows = _hist_rows(rng, fp=other)
+        assert baseline_for("case_a", FP, rows) is None
+        assert bhist.has_foreign_fingerprint("case_a", FP, rows)
+
+
+# --------------------------------------------------------------------------
+# gate
+# --------------------------------------------------------------------------
+
+PHASES_BASE = {"fleet.queues": {"count": 100, "total_s": 0.050},
+               "pricing.analytical": {"count": 100, "total_s": 0.048},
+               "fleet.decide": {"count": 100, "total_s": 0.020}}
+
+
+class TestGate:
+    def test_unchanged_run_passes(self):
+        rng = np.random.default_rng(8)
+        hist = _hist_rows(rng, runs=3, phases=PHASES_BASE)
+        cur = [{"name": "case_a", "us_per_call": 100.0,
+                "samples": _samples(rng, 100.0, n=5),
+                "phases": PHASES_BASE}]
+        rep = gate_records(cur, hist, FP)
+        assert not rep.failed and not rep.refused
+        assert rep.verdicts[0].status in ("ok", "improved")
+
+    def test_slowdown_fails_and_names_dominant_phase(self):
+        rng = np.random.default_rng(9)
+        hist = _hist_rows(rng, runs=3, phases=PHASES_BASE)
+        cur_phases = {"fleet.queues": {"count": 100, "total_s": 0.052},
+                      "pricing.analytical": {"count": 100,
+                                             "total_s": 0.148},
+                      "fleet.decide": {"count": 100, "total_s": 0.021}}
+        cur = [{"name": "case_a", "us_per_call": 200.0,
+                "samples": _samples(rng, 200.0, n=5),
+                "phases": cur_phases}]
+        rep = gate_records(cur, hist, FP)
+        assert rep.failed
+        v = rep.verdicts[0]
+        assert v.status == "regression"
+        assert v.phase == "pricing.analytical"
+        assert "+" in v.phase_detail
+        txt = render(rep, cur)
+        assert "FAIL" in txt and "pricing.analytical" in txt
+
+    def test_fingerprint_mismatch_refuses_to_gate(self):
+        rng = np.random.default_rng(10)
+        other = dict(FP, cpu_count=64)
+        hist = _hist_rows(rng, fp=other)
+        # even a 10x slowdown must not "fail" against a foreign machine
+        cur = [{"name": "case_a", "us_per_call": 1000.0,
+                "samples": _samples(rng, 1000.0, n=5)}]
+        rep = gate_records(cur, hist, FP)
+        assert rep.refused and not rep.failed
+        assert rep.verdicts[0].status == "fingerprint_mismatch"
+        assert "refusing to gate" in rep.reason
+        assert "REFUSED" in render(rep, cur)
+
+    def test_error_and_new_records_are_skipped_not_gated(self):
+        rng = np.random.default_rng(11)
+        hist = _hist_rows(rng, runs=3)
+        cur = [{"name": "case_a", "error": "RuntimeError: x"},
+               {"name": "case_new", "us_per_call": 5.0,
+                "samples": [5.0, 5.1, 5.2]}]
+        rep = gate_records(cur, hist, FP)
+        assert not rep.failed
+        assert {v.status for v in rep.verdicts} == {"error", "new"}
+
+    def test_attribution_prefers_absolute_contribution(self):
+        # a 2us phase that quadrupled must not outrank the critical-path
+        # phase that grew 50%
+        base = [{"phases": {"big": {"count": 1, "total_s": 1.0},
+                            "tiny": {"count": 1, "total_s": 2e-5}}}]
+        cur = {"phases": {"big": {"count": 1, "total_s": 1.5},
+                          "tiny": {"count": 1, "total_s": 8e-5}}}
+        phase, detail = attribute_phase(base, cur)
+        assert phase == "big" and "+50%" in detail
+
+    def test_gate_report_json_roundtrips(self):
+        rng = np.random.default_rng(12)
+        hist = _hist_rows(rng, runs=3)
+        cur = [{"name": "case_a", "us_per_call": 100.0,
+                "samples": _samples(rng, 100.0, n=5)}]
+        d = gate_records(cur, hist, FP).to_json()
+        import json
+        assert json.loads(json.dumps(d)) == d
+        assert d["counts"] and d["fingerprint"] == FP

@@ -335,17 +335,18 @@ def _load_bench_module():
 
 
 def test_timeit_reports_samples():
+    from repro.bench import runner as brunner
     bench = _load_bench_module()
     t = bench._timeit(lambda: jnp.ones(8), n=2, reps=4)
     assert isinstance(t, float) and len(t.samples) == 4
     assert float(t) == min(t.samples)
-    bench.RECORDS.clear()
-    bench.ROWS.clear()
-    bench.row("x", t, "d")
-    bench.row("y", 12.34, "single-sample rows keep working")
-    rx, ry = bench.RECORDS
-    assert rx["samples"] == 4 and rx["us_per_call"] == rx["min"]
+    sink = brunner.Sink(echo=False)
+    sink.row("x", t, "d")
+    sink.row("y", 12.34, "single-sample rows keep working")
+    rx, ry = sink.records
+    assert rx["samples"] == [float(f"{s:.4g}") for s in t.samples]
+    assert rx["us_per_call"] == rx["min"]
     assert rx["mean"] >= rx["min"] and rx["std"] >= 0.0
-    assert ry == {"name": "y", "us_per_call": 12.3, "derived":
-                  "single-sample rows keep working", "samples": 1,
-                  "min": 12.3, "mean": 12.3, "std": 0.0}
+    assert ry["name"] == "y" and ry["us_per_call"] == 12.34
+    assert ry["samples"] == [12.34] and ry["n"] == 1
+    assert ry["ci_lo"] == ry["ci_hi"] == 12.34
