@@ -25,6 +25,10 @@ System benches:
   roofline_suite        — dominant roofline terms from results/dryrun.jsonl
   serving_decode        — us/token through the serving engine (reduced model)
   split_inference       — EdgeRL split execution vs monolithic forward
+  megafleet_scaling     — vectorized fleet engine devices/sec scaling
+                          curve (n_uavs 256 / 4k / 32k / 100k)
+  megafleet_speedup     — loop-vs-vectorized per-epoch cost ratio at 32k
+                          devices (gated) + speedup and scaling exponent
   scenario_sweep        — every registered scenario preset via run_scenario
   train_throughput      — A2C episodes/s, batched (vmap) vs looped
   pricing_numpy_throughput — numpy pricing-core actions/s (fleet hot path)
@@ -464,6 +468,83 @@ def fleet_sim(n_requests=100_000, n_uavs=8, reps=3):
         devices_per_s=n_uavs * res.epochs / dt)
 
 
+def _megafleet_world(n_uavs):
+    """One mega-fleet bench world: paper env provisioned per device,
+    1 s slots, Poisson 5 rps/device, static oracle policy."""
+    from repro.core import make_paper_env
+    from repro.core.latency import LatencyParams
+    from repro.policies import build_policy
+    from repro.sim import AnalyticalBackend, PoissonTrace
+    cfg, tables = make_paper_env(
+        n_uavs=n_uavs, slot_seconds=1.0, peak_rps=10.0,
+        latency=LatencyParams(server_flops=0.55e12 * n_uavs,
+                              bw_max_bps=1e9),
+        frames_per_slot=10.0)
+    mids = np.arange(n_uavs, dtype=np.int32) % tables.n_models
+    pol = build_policy("greedy_oracle", cfg, tables)
+    return cfg, tables, mids, pol, AnalyticalBackend(cfg, tables), \
+        PoissonTrace(rate_rps=5.0)
+
+
+def _megafleet_epoch_s(world, engine, epochs, reps):
+    """Best-of-reps per-epoch seconds for one engine (+ samples)."""
+    from repro.sim import FleetConfig, simulate
+    cfg, tables, mids, pol, backend, trace = world
+    fl = FleetConfig(engine=engine, max_epochs=epochs,
+                     record_epochs=False)
+    kw = dict(n_requests=10**12, seed=0, fleet=fl, backend=backend,
+              model_ids=mids)
+    simulate(cfg, tables, pol, trace, **kw)          # warm (policy jit)
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = simulate(cfg, tables, pol, trace, **kw)
+        samples.append((time.perf_counter() - t0) / res.epochs)
+    return min(samples), samples, res
+
+
+def megafleet_scaling(n_uavs=4096, epochs=4, reps=3):
+    """Devices/sec of the vectorized fleet engine across fleet sizes —
+    the mega-fleet scaling curve (n_uavs axis up to 100k devices)."""
+    world = _megafleet_world(n_uavs)
+    sec, samples, res = _megafleet_epoch_s(world, "vectorized",
+                                           epochs, reps)
+    row(f"megafleet_scaling[n_uavs={n_uavs}]",
+        Timing(sec * 1e6, [s * 1e6 for s in samples]),
+        f"per_epoch,devices_per_s={n_uavs/sec:,.0f} "
+        f"req_per_epoch={res.served//res.epochs} engine=vectorized",
+        devices=n_uavs, devices_per_s=n_uavs / sec)
+
+
+def megafleet_speedup(n_uavs=32768, epochs=4, reps=3):
+    """Loop-vs-vectorized cost ratio at 32k devices (the mega-fleet
+    acceptance claim: vectorized >= 20x devices*epochs/sec).
+
+    The *gated* value is the vectorized/loop per-epoch cost ratio —
+    lower is better, so losing speedup shows up as the increase the
+    gate flags. The speedup itself and the scaling exponent (log-log
+    slope of vectorized per-epoch time over a 256..32k size sweep;
+    1.0 = linear in devices) ride along as extra fields."""
+    world = _megafleet_world(n_uavs)
+    vec_s, vec_samples, _ = _megafleet_epoch_s(world, "vectorized",
+                                               epochs, reps)
+    loop_s, _, _ = _megafleet_epoch_s(world, "loop", epochs,
+                                      max(reps - 1, 1))
+    ratios = [v / loop_s for v in vec_samples]
+    sizes = (256, 4096, 32768)
+    curve = [vec_s if n == n_uavs else
+             _megafleet_epoch_s(_megafleet_world(n), "vectorized",
+                                epochs, reps)[0]
+             for n in sizes]
+    slope = np.polyfit(np.log(sizes), np.log(curve), 1)[0]
+    row("megafleet_speedup", Timing(min(ratios), ratios),
+        f"vec_over_loop_cost,speedup={loop_s/vec_s:.1f}x "
+        f"loop_epoch_ms={loop_s*1e3:.0f} vec_epoch_ms={vec_s*1e3:.1f} "
+        f"scaling_exponent={slope:.2f} devices={n_uavs}",
+        speedup=loop_s / vec_s, scaling_exponent=float(slope),
+        devices=n_uavs)
+
+
 def scenario_sweep(n_requests=2000):
     """Every registered scenario preset through run_scenario with the
     static roster — the one-command experiment surface as a perf/smoke
@@ -610,6 +691,9 @@ def build_matrix() -> Matrix:
     m.add(scheduler_throughput, tags=("system", "smoke"))
     m.add(fleet_sim, tags=("system", "smoke"),
           axes={"n_uavs": (8, 64, 256)})
+    m.add(megafleet_scaling, tags=("system", "smoke"),
+          axes={"n_uavs": (256, 4096, 32768, 100_000)})
+    m.add(megafleet_speedup, tags=("system", "smoke"))
     m.add(scenario_sweep, tags=("system",))
     m.add(train_throughput, tags=("system", "smoke"))
     m.add(pricing_numpy_throughput, tags=("system", "smoke"))

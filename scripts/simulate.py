@@ -62,7 +62,7 @@ from repro.scenarios import (Scenario, get_scenario, run_scenario,
 # actually typed, while the no-scenario path fills in from this table.
 DEFAULTS = dict(
     scenario=None, list_scenarios=False,
-    trace="diurnal", devices=8, requests=100_000,
+    trace="diurnal", devices=8, requests=100_000, engine="loop",
     policy=None, compare=None, seeds="0",
     online=False, drift_schedule=None,
     episodes=300, train_seed=0, save_policy=None, load_policy=None,
@@ -98,6 +98,11 @@ def build_parser() -> argparse.ArgumentParser:
                              "replay"))
     ap.add_argument("--devices", type=int)
     ap.add_argument("--requests", type=int)
+    ap.add_argument("--engine", choices=("loop", "vectorized", "scan"),
+                    help="fleet epoch-flow engine (sim.megafleet): "
+                    "loop = per-device oracle, vectorized = fused numpy "
+                    "(bit-identical, 100k+ devices), scan = jitted "
+                    "lax.scan (stationary worlds, static policies)")
     ap.add_argument("--policy", help="single policy (registry name)")
     ap.add_argument("--compare",
                     help="comma-separated policies; overrides --policy")
@@ -212,7 +217,7 @@ def apply_overrides(sc: Scenario, provided: dict, merged: dict) -> Scenario:
               "models": "models", "env": "env", "arch": "arch",
               "execute": "execute", "sample": "sample",
               "exec_seq": "exec_seq", "episodes": "episodes",
-              "train_seed": "train_seed"}
+              "train_seed": "train_seed", "engine": "engine"}
     repl = {field: provided[flag] for flag, field in direct.items()
             if flag in provided}
     if "slo_ms" in provided:
@@ -255,7 +260,7 @@ def scenario_from_args(merged: dict) -> Scenario:
         n_requests=merged["requests"], episodes=merged["episodes"],
         train_seed=merged["train_seed"], execute=merged["execute"],
         sample=merged["sample"], exec_seq=merged["exec_seq"],
-        drift=merged["drift_schedule"],
+        drift=merged["drift_schedule"], engine=merged["engine"],
         trace=trace, trace_kw=kw)
 
 

@@ -106,6 +106,12 @@ class Regime:
     battery_scale: Optional[float] = None     # applied once on entry
     kill_devices: Tuple[int, ...] = ()
     revive_devices: Tuple[int, ...] = ()
+    # pricing backend cached at compile() time for patched-config
+    # regimes (None when env_cfg is the caller's base config — the
+    # fleet then reuses its own backend). Excluded from equality/repr:
+    # it is a derived cache, not part of the regime's identity.
+    backend: object = dataclasses.field(default=None, compare=False,
+                                        repr=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,10 +145,23 @@ class WorldSchedule:
                 i += 1
         return i
 
-    def compile(self, base_cfg) -> List[Regime]:
+    def compile(self, base_cfg, tables=None) -> List[Regime]:
         """Resolve patches cumulatively into per-regime records. Each
         patch applies on top of the previous regime's config (or the
-        base config under ``reset=True``); ``trace_scale`` inherits."""
+        base config under ``reset=True``); ``trace_scale`` inherits.
+
+        With ``tables``, each patched-config regime also carries a
+        ready ``AnalyticalBackend`` (one numpy table snapshot per
+        regime, built here once) so the fleet's regime switches inside
+        the epoch loop never rebuild pricing state. Regimes whose
+        config *is* ``base_cfg`` (pure resets) leave ``backend=None``
+        and price through the fleet's own backend."""
+        def make_backend(cfg):
+            if tables is None or cfg is base_cfg:
+                return None
+            from repro.sim.backends import AnalyticalBackend
+            return AnalyticalBackend(cfg, tables)
+
         regimes = [Regime(index=0, start_epoch=0, name="base",
                           env_cfg=base_cfg)]
         cfg, scale = base_cfg, 1.0
@@ -157,7 +176,8 @@ class WorldSchedule:
                 name=p.name or f"regime{i + 1}", env_cfg=cfg,
                 trace_scale=scale, battery_scale=p.battery_scale,
                 kill_devices=tuple(p.kill_devices),
-                revive_devices=tuple(p.revive_devices)))
+                revive_devices=tuple(p.revive_devices),
+                backend=make_backend(cfg)))
         return regimes
 
 

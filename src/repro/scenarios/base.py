@@ -67,6 +67,10 @@ class Scenario:
     seeds: Tuple[int, ...] = (0, 1, 2)   # paired across policies
     n_requests: int = 20_000
     policies: Tuple[str, ...] = ("a2c", "device_only", "full_offload")
+    # fleet epoch-flow engine (FleetConfig.engine / sim.megafleet):
+    # "loop" per-device oracle, "vectorized" fused-numpy (bit-identical),
+    # "scan" jitted lax.scan (stationary worlds, static policies)
+    engine: str = "loop"
 
     # --- training budget (trainable policies) -----------------------------
     episodes: int = 300

@@ -156,6 +156,20 @@ register_scenario(Scenario(
     episodes=300, entropy_coef=0.03, batch_envs=4))
 
 register_scenario(Scenario(
+    name="megafleet",
+    description="mega-fleet scale: 100k devices under a diurnal load "
+                "through the vectorized epoch engine "
+                "(sim.megafleet) — static policies only (the fused "
+                "epoch is the product under test; trainable nets "
+                "would dominate wall-clock at this width)",
+    devices=100_000, models="cycle",
+    trace="diurnal", trace_kw={"base_rps": 2.0, "peak_rps": 8.0},
+    slot_seconds=1.0, peak_rps=10.0, slo_s=1.0,
+    seeds=(0,), n_requests=5_000_000,
+    policies=("greedy_oracle", "device_only", "full_offload"),
+    engine="vectorized"))
+
+register_scenario(Scenario(
     name="tpu-submesh",
     description="TPU adaptation: 2 head submeshes serving reduced "
                 "qwen2-0.5b, version axis = {bf16, w8, w4}, ICI uplink, "

@@ -206,7 +206,7 @@ def run_scenario(scenario: Scenario,
         env_cfg, tables, model_ids, backend_factory = scenario.build_env()
         trace = scenario.build_trace()
         schedule = scenario.build_schedule()
-    fleet = FleetConfig(slo_s=scenario.slo_s)
+    fleet = FleetConfig(slo_s=scenario.slo_s, engine=scenario.engine)
 
     # verbose routes the narration at info level (console by default,
     # silenced by --quiet); non-verbose runs still record it at debug,

@@ -10,20 +10,26 @@ EdgeRL controller and the executable serving stack.
   that cross-checks a sampled subset through ``SplitServingEngine``.
 - ``fleet``    — the discrete-event loop: each decision epoch the
   controller picks (version, cut) per device from *measured* state.
+- ``megafleet`` — the vectorized engines behind
+  ``FleetConfig(engine=...)``: the whole epoch as fused
+  (devices,)-array ops in numpy (bit-identical to the loop oracle) or
+  as a jitted ``jax.lax.scan`` over epochs with an opt-in sharded
+  device axis — 100k+ devices per host.
 """
 from repro.sim.traces import (DiurnalTrace, MMPPTrace, PoissonTrace,
                               RandomRateTrace, ReplayTrace, Trace,
-                              get_trace, trace_names)
-from repro.sim.metrics import (FleetMetrics, LATENCY_SCHEMA,
+                              get_trace, presample_counts, trace_names)
+from repro.sim.metrics import (EpochLog, FleetMetrics, LATENCY_SCHEMA,
                                summarize_latencies)
 from repro.sim.backends import AnalyticalBackend, ExecuteBackend
-from repro.sim.fleet import FleetConfig, SimResult, simulate
+from repro.sim.fleet import ENGINES, FleetConfig, SimResult, simulate
+from repro.sim.megafleet import lindley_core, simulate_scan
 
 __all__ = [
     "Trace", "PoissonTrace", "MMPPTrace", "DiurnalTrace", "ReplayTrace",
     "RandomRateTrace",
-    "get_trace", "trace_names",
-    "FleetMetrics", "LATENCY_SCHEMA", "summarize_latencies",
+    "get_trace", "trace_names", "presample_counts",
+    "EpochLog", "FleetMetrics", "LATENCY_SCHEMA", "summarize_latencies",
     "AnalyticalBackend", "ExecuteBackend", "FleetConfig", "SimResult",
-    "simulate",
+    "simulate", "ENGINES", "lindley_core", "simulate_scan",
 ]

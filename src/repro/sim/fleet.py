@@ -33,7 +33,7 @@ the policy's parameters mid-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -41,8 +41,10 @@ from repro import obs
 from repro.core import energy as en
 from repro.core.env import EnvConfig, ProfileTables
 from repro.sim.backends import AnalyticalBackend
-from repro.sim.metrics import FleetMetrics
+from repro.sim.metrics import EpochLog, FleetMetrics
 from repro.sim.traces import Trace
+
+ENGINES = ("loop", "vectorized", "scan")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +60,19 @@ class FleetConfig:
     # input range. Pricing and metrics always use the true queue.
     queue_obs_clip: float = 25.0
     record_epochs: bool = True
+    # epoch-flow engine (repro.sim.megafleet): "loop" walks per-device
+    # FIFOs in Python (the parity oracle); "vectorized" runs the same
+    # recursion as fused (devices,)-array numpy ops, bit-identical
+    # under the same seed; "scan" is a jitted jax.lax.scan over epochs
+    # (float32, histogram percentiles, stationary worlds only)
+    engine: str = "loop"
+    # epoch_log bounds for mega-fleet horizons: keep every stride-th
+    # epoch row, stop after cap rows (None = unbounded)
+    log_stride: int = 1
+    log_cap: Optional[int] = None
+    # scan engine only: shard the device axis over every visible jax
+    # device via shard_map (per-epoch psum reductions)
+    shard: bool = False
 
 
 @dataclasses.dataclass
@@ -69,7 +84,9 @@ class SimResult:
     served: int
     duration_s: float
     cross_check: Optional[Dict] = None
-    epoch_log: List[Dict] = dataclasses.field(default_factory=list)
+    # EpochLog (columnar, dict-row view) — annotated loosely because a
+    # plain list of dicts is also accepted by every consumer
+    epoch_log: object = dataclasses.field(default_factory=list)
     # drift/adaptation metrics (runs with a schedule or an OnlineConfig):
     # per-regime reward/oracle/regret/recovery + online-learner counters
     adaptation: Optional[Dict] = None
@@ -83,6 +100,39 @@ class SimResult:
                 j, k = np.unravel_index(np.argmax(h[mi]), h[mi].shape)
                 out[mi] = (int(j), int(k))
         return out
+
+
+def _queues_loop(counts, alive, free_at, pr, srv_wait, t_now,
+                 slot_seconds, w_rng, metrics, slo_s):
+    """One epoch of request flow, per-device loop (engine="loop").
+
+    The parity oracle for ``megafleet.numpy_queues``: same rng stream
+    (offsets drawn unconditionally for every device with arrivals — the
+    world-rng draw order must not depend on policy-driven state like
+    battery death, or two policies under the same seed would unpair
+    mid-run), same recursion, same device-order metric recording.
+    Mutates ``free_at`` in place; returns slo_hits.
+    """
+    slo_hits = 0
+    for d in range(counts.shape[0]):
+        c = int(counts[d])
+        if c == 0:
+            continue
+        offs = t_now + np.sort(w_rng.uniform(0.0, slot_seconds, c))
+        if not alive[d]:
+            continue                   # dropped — counted by the caller
+        s = pr.head_s[d] + pr.tx_s[d]
+        idx = np.arange(c)
+        start = np.maximum.accumulate(np.maximum(offs, free_at[d])
+                                      - s * idx)
+        done = start + s * (idx + 1)       # head+tx completion times
+        free_at[d] = done[-1]
+        lat = done - offs + pr.tail_s[d]
+        if pr.offloaded[d]:
+            lat = lat + srv_wait
+        metrics.record(lat, np.full(c, pr.energy_j[d]), device=d)
+        slo_hits += int(np.sum(lat <= slo_s))
+    return slo_hits
 
 
 def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
@@ -125,6 +175,27 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
             "the same objects (run_scenario does this for you)")
     cfg = env_cfg
     n = cfg.n_uavs
+    if fleet.engine not in ENGINES:
+        raise ValueError(f"unknown fleet engine {fleet.engine!r}; "
+                         f"valid engines: {', '.join(ENGINES)}")
+    if fleet.shard and fleet.engine != "scan":
+        raise ValueError("FleetConfig.shard requires engine='scan' — the "
+                         "host engines have no device axis to shard")
+    if fleet.engine == "scan":
+        from repro.sim import megafleet
+        if schedule is not None or online is not None:
+            raise ValueError(
+                "engine='scan' compiles a stationary world into one "
+                "jitted lax.scan; drift schedules and online adaptation "
+                "need host round-trips — use engine='vectorized'")
+        if backend is not None and type(backend) is not AnalyticalBackend:
+            raise ValueError(
+                "engine='scan' prices on-device through the jnp pricing "
+                "core; execute cross-check backends need the host loop")
+        return megafleet.simulate_scan(
+            env_cfg, tables, policy, trace, n_requests=n_requests,
+            seed=seed, fleet=fleet, model_ids=model_ids)
+    from repro.sim import megafleet
     backend = backend if backend is not None else AnalyticalBackend(cfg,
                                                                     tables)
 
@@ -136,7 +207,9 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
             raise ValueError("drift schedules price through the analytical "
                              "backend; the execute cross-check assumes one "
                              "stationary table world")
-        regimes = schedule.compile(cfg)
+        # compile() caches one AnalyticalBackend per patched regime, so
+        # switches inside the epoch loop never rebuild table snapshots
+        regimes = schedule.compile(cfg, tables)
     if online is not None or schedule is not None:
         from repro.online.monitor import AdaptationTracker, oracle_reward
         tracker = AdaptationTracker()
@@ -183,8 +256,9 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
 
     stream = trace.stream(t_rng, n, cfg.slot_seconds)
     metrics = FleetMetrics(slo_s=fleet.slo_s)
-    hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts))
-    epoch_log: List[Dict] = []
+    hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts),
+                    dtype=np.int64)
+    epoch_log = EpochLog(stride=fleet.log_stride, cap=fleet.log_cap)
     served = 0
     epoch = 0
     t_now = 0.0
@@ -203,7 +277,7 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                 phys = reg.env_cfg
                 lp, pw = phys.latency, phys.power
                 phys_backend = backend if phys is cfg \
-                    else AnalyticalBackend(phys, tables)
+                    else (reg.backend or AnalyticalBackend(phys, tables))
                 if reg.battery_scale is not None:
                     battery = battery * reg.battery_scale
                 for d in reg.kill_devices:
@@ -240,42 +314,33 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
         # 2) price this epoch's actions under the current regime
         pr = phys_backend.price(model_ids, actions, bw, p_tx)
 
-        # 3) flow requests through device FIFOs (Lindley recursion)
-        tail_in_s = 0.0
-        dropped = 0
-        slo_hits = 0
-        executed = False
-        with obs.span("fleet.queues"):
-          for d in range(n):
-            c = int(counts[d])
-            if c == 0:
-                continue
-            # draw offsets unconditionally: the world-rng draw order must
-            # not depend on policy-driven state (battery death), or two
-            # policies under the same seed would unpair mid-run
-            offs = t_now + np.sort(w_rng.uniform(0.0, cfg.slot_seconds, c))
-            if not alive[d]:
-                metrics.drop(c)
-                dropped += c
-                continue
-            s = pr.head_s[d] + pr.tx_s[d]
-            idx = np.arange(c)
-            start = np.maximum.accumulate(np.maximum(offs, free_at[d])
-                                          - s * idx)
-            done = start + s * (idx + 1)       # head+tx completion times
-            free_at[d] = done[-1]
-            lat = done - offs + pr.tail_s[d]
-            if pr.offloaded[d]:
-                lat = lat + srv_wait
-                tail_in_s += c * pr.tail_s[d]
-            metrics.record(lat, np.full(c, pr.energy_j[d]), device=d)
-            slo_hits += int(np.sum(lat <= fleet.slo_s))
-            hist[model_ids[d], actions[d, 0], actions[d, 1]] += c
-            if not executed:
-                phys_backend.maybe_execute(int(model_ids[d]),
-                                           int(actions[d, 0]),
-                                           int(actions[d, 1]))
-                executed = True
+        # 3) flow requests through device FIFOs (Lindley recursion).
+        # Everything outside the queueing recursion itself is shared by
+        # both host engines as vectorized expressions — same float
+        # summation order, so the engines stay bit-identical.
+        sel = alive & (counts > 0)
+        dropped = int(counts[~alive].sum())
+        if dropped:
+            metrics.drop(dropped)
+        tail_in_s = float(np.where(sel & pr.offloaded,
+                                   counts * pr.tail_s, 0.0).sum())
+        with obs.span("fleet.queues", engine=fleet.engine):
+            if fleet.engine == "vectorized":
+                slo_hits = megafleet.numpy_queues(
+                    counts, alive, free_at, pr, srv_wait, t_now,
+                    cfg.slot_seconds, w_rng, metrics, fleet.slo_s)
+            else:
+                slo_hits = _queues_loop(
+                    counts, alive, free_at, pr, srv_wait, t_now,
+                    cfg.slot_seconds, w_rng, metrics, fleet.slo_s)
+        # one scatter-add per epoch instead of a per-device increment
+        np.add.at(hist, (model_ids[sel], actions[sel, 0],
+                         actions[sel, 1]), counts[sel])
+        if sel.any():
+            d0 = int(np.argmax(sel))
+            phys_backend.maybe_execute(int(model_ids[d0]),
+                                       int(actions[d0, 0]),
+                                       int(actions[d0, 1]))
 
         # 3b) adaptation metrics + online update: the epoch's slot-level
         # reward (Eq. 8 over the measured view) priced under the CURRENT

@@ -9,7 +9,7 @@ came from the analytical pricer or from wall-clock decode steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -72,7 +72,11 @@ class FleetMetrics:
             self._energy.append(np.broadcast_to(e, lat.shape).copy()
                                 if e.size != lat.size else e)
         if device is not None:
-            self._device.append(np.full(lat.shape, device, dtype=np.int32))
+            d = np.asarray(device, dtype=np.int32)
+            # scalar (the loop engine's per-device batches) broadcasts;
+            # the vectorized engine passes one per-request id array
+            self._device.append(np.broadcast_to(d, lat.shape).copy()
+                                if d.shape != lat.shape else d)
 
     def drop(self, n: int):
         """Requests lost outright (dead device): SLO misses, no latency."""
@@ -106,3 +110,106 @@ class FleetMetrics:
         out["energy_per_request_j"] = float(np.mean(e)) if e.size else 0.0
         out["duration_s"] = float(duration_s) if duration_s else 0.0
         return out
+
+
+class EpochLog:
+    """Columnar per-epoch log with a dict-row view.
+
+    ``record_epochs=True`` used to allocate a Python dict per epoch —
+    ~400 bytes and a GC object each for runs that can span 100k epochs.
+    This stores one preallocated, geometrically-grown numpy column per
+    key and materializes dict rows only on access, so existing
+    consumers (``log[0]["arrivals"]``, ``log[8:]``, iteration, ``len``)
+    keep working unchanged.
+
+    ``stride`` keeps every stride-th offered row; ``cap`` stops keeping
+    rows after ``cap`` are stored. Both bound memory on mega-fleet
+    horizons without touching the simulation itself.
+    """
+
+    def __init__(self, stride: int = 1, cap: Optional[int] = None):
+        if stride < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        self.stride = int(stride)
+        self.cap = cap if cap is None else int(cap)
+        self._cols: Dict[str, np.ndarray] = {}
+        self._n = 0          # rows stored
+        self._offered = 0    # rows offered (pre stride/cap)
+
+    def _grow(self, need: int):
+        for k, col in self._cols.items():
+            if col.shape[0] < need:
+                new = np.zeros(max(need, 2 * col.shape[0]), col.dtype)
+                new[:self._n] = col[:self._n]
+                self._cols[k] = new
+
+    def append(self, row: Dict) -> None:
+        keep = (self._offered % self.stride == 0) and (
+            self.cap is None or self._n < self.cap)
+        self._offered += 1
+        if not keep:
+            return
+        if not self._cols:
+            for k, v in row.items():
+                dtype = np.int64 if isinstance(v, (int, np.integer)) \
+                    else np.float64 if isinstance(v, (float, np.floating)) \
+                    else object
+                self._cols[k] = np.zeros(16, dtype)
+        self._grow(self._n + 1)
+        for k, v in row.items():
+            self._cols[k][self._n] = v
+        self._n += 1
+
+    def extend_columns(self, **cols) -> None:
+        """Bulk-append equal-length columns (the scan engine's stacked
+        per-epoch outputs), applying stride/cap by slicing."""
+        T = len(next(iter(cols.values())))
+        idx = np.arange(self._offered, self._offered + T)
+        keep = (idx % self.stride) == 0
+        self._offered += T
+        sel = {k: np.asarray(v)[keep] for k, v in cols.items()}
+        m = len(next(iter(sel.values()))) if sel else 0
+        if self.cap is not None:
+            m = min(m, max(self.cap - self._n, 0))
+        if m == 0:
+            return
+        if not self._cols:
+            self._cols = {k: np.zeros(16, np.asarray(v).dtype)
+                          for k, v in sel.items()}
+        self._grow(self._n + m)
+        for k, v in sel.items():
+            self._cols[k][self._n:self._n + m] = v[:m]
+        self._n += m
+
+    def column(self, key: str) -> np.ndarray:
+        return self._cols[key][:self._n]
+
+    @property
+    def columns(self) -> Dict[str, np.ndarray]:
+        return {k: c[:self._n] for k, c in self._cols.items()}
+
+    def _row(self, i: int) -> Dict:
+        return {k: c[i].item() if hasattr(c[i], "item") else c[i]
+                for k, c in self._cols.items()}
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def __iter__(self) -> Iterator[Dict]:
+        return (self._row(i) for i in range(self._n))
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._row(j) for j in range(*i.indices(self._n))]
+        if i < 0:
+            i += self._n
+        if not 0 <= i < self._n:
+            raise IndexError(i)
+        return self._row(i)
+
+    def __repr__(self) -> str:
+        return (f"EpochLog(rows={self._n}, offered={self._offered}, "
+                f"keys={list(self._cols)})")

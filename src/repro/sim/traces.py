@@ -35,6 +35,29 @@ class Trace:
         raise NotImplementedError
 
 
+def presample_counts(trace: Trace, rng: np.random.Generator,
+                     n_devices: int, slot_seconds: float,
+                     n_requests: int, max_epochs: int) -> np.ndarray:
+    """Materialize the epoch stream up front: counts for every epoch
+    until cumulative arrivals reach ``n_requests`` (or ``max_epochs``),
+    as a (T, n_devices) int64 array.
+
+    Consumes ``rng`` exactly as ``fleet.simulate``'s incremental
+    ``next(stream)`` calls would, and applies the identical termination
+    rule (stop *after* the epoch that crosses ``n_requests``) — so the
+    scan engine sees the same workload, epoch for epoch, as the host
+    engines under the same trace seed.
+    """
+    stream = trace.stream(rng, n_devices, slot_seconds)
+    out = []
+    served = 0
+    while served < n_requests and len(out) < max_epochs:
+        counts = np.asarray(next(stream), dtype=np.int64)
+        out.append(counts)
+        served += int(counts.sum())
+    return np.stack(out) if out else np.zeros((0, n_devices), np.int64)
+
+
 @dataclasses.dataclass
 class PoissonTrace(Trace):
     """Homogeneous Poisson arrivals at ``rate_rps`` per device."""
