@@ -676,6 +676,50 @@ def quant_matmul(M=512, K=512, N=512):
     row("quant_matmul_interpret", us_pl, f"MKN={M},CPU_interpret_mode")
 
 
+def cluster_routing(n_requests=12_000, reps=3):
+    """repro.cluster: routed fleet throughput over the heterogeneous
+    4-server pool (hetero-4 x near-far, widened (version, cut, server)
+    actions, hysteresis autoscaler) — us/epoch per router baseline plus
+    the SLO attainment each dispatch rule earns on the same stream."""
+    from repro.cluster import (AutoscalerConfig, build_cluster, get_pool,
+                               get_topology)
+    from repro.core import make_paper_env
+    from repro.core.latency import LatencyParams
+    from repro.policies import build_policy
+    from repro.sim import (AnalyticalBackend, FleetConfig, PoissonTrace,
+                           simulate)
+    n_uavs = 8
+    cluster = build_cluster(get_pool("hetero-4"),
+                            get_topology("near-far", n_uavs, 4))
+    cfg, tables = make_paper_env(
+        n_uavs=n_uavs, slot_seconds=10.0, peak_rps=30.0,
+        latency=LatencyParams(server_flops=0.55e12 * n_uavs,
+                              bw_max_bps=1e9),
+        frames_per_slot=300.0, cluster=cluster)
+    mids = np.arange(n_uavs, dtype=np.int32) % tables.n_models
+    trace = PoissonTrace(rate_rps=8.0)
+    for name in ("round_robin", "join_shortest_queue", "greedy_oracle"):
+        pol = build_policy(name, cfg, tables)
+        kw = dict(model_ids=mids, n_requests=n_requests, seed=0,
+                  backend=AnalyticalBackend(cfg, tables),
+                  fleet=FleetConfig(slo_s=2.0),
+                  autoscaler=AutoscalerConfig(policy="hysteresis"))
+        simulate(cfg, tables, pol, trace, **kw)   # warm (jit compiles)
+        samples, dts = [], []
+        for _ in range(reps):   # same seed: identical epochs each rep
+            t0 = time.perf_counter()
+            res = simulate(cfg, tables, pol, trace, **kw)
+            dts.append(time.perf_counter() - t0)
+            samples.append(dts[-1] / max(res.epochs, 1) * 1e6)
+        s = res.summary
+        row(f"cluster_routing[{name}]", Timing(min(samples), samples),
+            f"per_epoch,req_per_s={res.served / min(dts):.0f} "
+            f"slo_att={s['slo_attainment']:.3f} "
+            f"p95_s={s['p95']:.3f} "
+            f"scale_events={s['scale_events']:.0f} "
+            f"mean_replicas={s['mean_replicas']:.2f}")
+
+
 def build_matrix() -> Matrix:
     """The declarative case matrix (replaces the hand-rolled ALL-list
     dispatch): paper artifacts, system benches, and the fleet-size axis
@@ -695,6 +739,7 @@ def build_matrix() -> Matrix:
           axes={"n_uavs": (256, 4096, 32768, 100_000)})
     m.add(megafleet_speedup, tags=("system", "smoke"))
     m.add(scenario_sweep, tags=("system",))
+    m.add(cluster_routing, tags=("system", "smoke"))
     m.add(train_throughput, tags=("system", "smoke"))
     m.add(pricing_numpy_throughput, tags=("system", "smoke"))
     m.add(online_adaptation, tags=("system",))

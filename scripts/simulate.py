@@ -65,6 +65,7 @@ DEFAULTS = dict(
     trace="diurnal", devices=8, requests=100_000, engine="loop",
     policy=None, compare=None, seeds="0",
     online=False, drift_schedule=None,
+    pool=None, topology=None, autoscale=None,
     episodes=300, train_seed=0, save_policy=None, load_policy=None,
     slo_ms=2000.0, slot_seconds=10.0,
     rate=6.0, rate_low=2.0, rate_high=30.0, peak_rps=30.0,
@@ -117,6 +118,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="apply a named WorldSchedule (link-brownout, "
                     "battery-cliff, flash-crowd, device-churn) to the "
                     "scenario; overrides a preset's own drift")
+    ap.add_argument("--pool", metavar="NAME",
+                    help="server-pool preset (repro.cluster: single, "
+                    "uniform-4, hetero-4); widens actions to (version, "
+                    "cut, server)")
+    ap.add_argument("--topology", metavar="NAME",
+                    help="device->server link topology preset (uniform, "
+                    "near-far, tiered); needs --pool")
+    ap.add_argument("--autoscale", choices=("threshold", "hysteresis"),
+                    help="pool autoscaler policy; needs --pool")
     ap.add_argument("--episodes", type=int,
                     help="training budget for trainable policies")
     ap.add_argument("--train-seed", type=int)
@@ -234,6 +244,13 @@ def apply_overrides(sc: Scenario, provided: dict, merged: dict) -> Scenario:
         repl["drift"] = provided["drift_schedule"]
         if provided["drift_schedule"] != sc.drift:
             repl["drift_kw"] = {}    # new kind: factory defaults
+    cluster_flags = {"pool": "pool", "topology": "topology",
+                     "autoscale": "autoscale"}
+    for flag, field in cluster_flags.items():
+        if flag in provided:
+            repl[field] = provided[flag]
+            if provided[flag] != getattr(sc, field):
+                repl[f"{field}_kw"] = {}    # new kind: preset defaults
     if repl:
         sc = sc.replace(**repl)
     return trace_override(sc, provided, merged)
@@ -261,6 +278,8 @@ def scenario_from_args(merged: dict) -> Scenario:
         train_seed=merged["train_seed"], execute=merged["execute"],
         sample=merged["sample"], exec_seq=merged["exec_seq"],
         drift=merged["drift_schedule"], engine=merged["engine"],
+        pool=merged["pool"], topology=merged["topology"] or "uniform",
+        autoscale=merged["autoscale"],
         trace=trace, trace_kw=kw)
 
 

@@ -1,0 +1,103 @@
+"""Router baselines for the cluster action space (version, cut, server).
+
+Each router fixes the *server* column with a classic dispatch rule and
+lets the greedy (V, K) grid pick the execution profile under that
+target — so router comparisons isolate the routing decision itself
+(what A2C/PPO must learn end-to-end) from profile selection:
+
+- ``round_robin``     cycle devices across servers each epoch
+- ``join_shortest_queue``  every device targets the min-depth server
+- ``local_only``      lightweight version, terminal cut, server 0 —
+                      the never-offload floor
+
+JSQ ranks servers by *job count*; on a heterogeneous pool (hetero-4) a
+quarter-rate tier with a short queue looks cheap even though its
+effective wait is long — exactly the misread a learned router can beat
+by pricing depth x service rate per target.
+
+Registered into the ``repro.policies`` registry (the canonical names
+above) on ``import repro.policies``; building one against a
+non-cluster env raises ValueError.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pricing
+from repro.policies.base import PolicySpec, register
+from repro.policies.static import StaticPolicy
+
+
+def _best_pair_given_server(cfg, tables, state, srv):
+    """Per-UAV reward argmax over (version, cut) with the server column
+    pinned at ``srv`` (n,) int32 — greedy_oracle's scoring restricted to
+    the router's chosen target."""
+    n = cfg.n_uavs
+    V, K = tables.n_versions, tables.n_cuts
+    w = cfg.weights
+    view = pricing.view_from_state(state)
+
+    jj, kk = jnp.meshgrid(jnp.arange(V), jnp.arange(K), indexing="ij")
+    pairs = jnp.stack([jj.ravel(), kk.ravel()], -1).astype(jnp.int32)
+
+    def score(pair):
+        actions = jnp.concatenate(
+            [jnp.tile(pair[None], (n, 1)), srv[:, None]], -1)
+        br = pricing.price_actions(cfg, tables, view, actions)
+        valid = tables.version_valid[state["model_id"], pair[0]]
+        s = (w.w_acc * br.acc_score + w.w_lat * br.lat_score
+             + w.w_energy * br.energy_score + w.w_stab * br.stab_score)
+        return jnp.where(valid > 0, s, -jnp.inf)
+
+    scores = jax.vmap(score)(pairs)          # (VK, n)
+    best = jnp.argmax(scores, axis=0)        # (n,)
+    return jnp.concatenate([pairs[best], srv[:, None]], -1)
+
+
+def round_robin(cfg, tables, state, rng=None):
+    """Cycle devices over servers, rotating one slot per epoch so the
+    assignment is load-balanced in time as well as across devices."""
+    n, S = cfg.n_uavs, cfg.cluster.n_servers
+    srv = ((jnp.arange(n) + state["t"]) % S).astype(jnp.int32)
+    return _best_pair_given_server(cfg, tables, state, srv)
+
+
+def join_shortest_queue(cfg, tables, state, rng=None):
+    """Every device targets the server with the fewest queued jobs —
+    depth-blind to heterogeneous service rates, by construction."""
+    n = cfg.n_uavs
+    q = jnp.broadcast_to(jnp.asarray(state["queue"]),
+                         (cfg.cluster.n_servers,))
+    srv = jnp.broadcast_to(jnp.argmin(q), (n,)).astype(jnp.int32)
+    return _best_pair_given_server(cfg, tables, state, srv)
+
+
+def local_only(cfg, tables, state, rng=None):
+    """Never offload: lightweight version, terminal cut, server 0 (the
+    server column is vestigial — no tail ever reaches it)."""
+    n = cfg.n_uavs
+    return jnp.stack([jnp.zeros((n,), jnp.int32),
+                      jnp.full((n,), tables.n_cuts - 1, jnp.int32),
+                      jnp.zeros((n,), jnp.int32)], -1)
+
+
+def _router(name: str, fn, description: str) -> PolicySpec:
+    def factory(env_cfg, tables, **kw):
+        if env_cfg.cluster is None:
+            raise ValueError(
+                f"router policy {name!r} needs a cluster-mode env "
+                "(EnvConfig.cluster is set by scenarios with a server "
+                "pool, e.g. --scenario edge-cluster)")
+        return StaticPolicy(env_cfg, tables, fn)
+
+    return register(PolicySpec(name=name, factory=factory,
+                               trainable=False, description=description))
+
+
+_router("round_robin", round_robin,
+        "rotate devices across servers; greedy (version, cut) per target")
+_router("join_shortest_queue", join_shortest_queue,
+        "all devices target the min-depth server (job-count JSQ)")
+_router("local_only", local_only,
+        "never offload: light version, terminal cut (cluster floor)")

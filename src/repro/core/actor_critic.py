@@ -42,13 +42,18 @@ def plan_agent(cfg, tables, ac):
                           "b": P((o,), (None,), "zeros")}
     per_uav = lambda i, o: {"w": P((n, i, o), (None, None, None)),
                             "b": P((n, o), (None, None), "zeros")}
-    return {
+    plan = {
         "actor": {"l1": dense(obs, h1), "l2": dense(h1, h2),
                   "uav": per_uav(h2, hu),
                   "ver": per_uav(hu, V), "cut": per_uav(hu, K)},
         "critic": {"l1": dense(obs, h1), "l2": dense(h1, h2),
                    "out": dense(h2, 1)},
     }
+    if cfg.cluster is not None:
+        # cluster mode: a third per-UAV head routes requests — the
+        # (version, cut, server) factored policy the paper's pair lacks
+        plan["actor"]["srv"] = per_uav(hu, cfg.cluster.n_servers)
+    return plan
 
 
 def init_agent(cfg, tables, ac, rng):
@@ -61,7 +66,10 @@ def _dense(p, x):
 
 
 def actor_apply(params, obs_flat):
-    """obs_flat: (obs_total,) -> logits_v (n, V), logits_c (n, K)."""
+    """obs_flat: (obs_total,) -> (logits_v (n, V), logits_c (n, K),
+    logits_s (n, S) or None). The server head exists only in
+    cluster-mode params — a *static* pytree-structure test, so jit
+    traces each param family once, never a runtime branch."""
     a = params["actor"]
     h = jax.nn.relu(_dense(a["l1"], obs_flat))
     h = jax.nn.relu(_dense(a["l2"], h))
@@ -69,7 +77,10 @@ def actor_apply(params, obs_flat):
                      + a["uav"]["b"])                       # (n, hu)
     lv = jnp.einsum("no,nov->nv", hu, a["ver"]["w"]) + a["ver"]["b"]
     lc = jnp.einsum("no,nok->nk", hu, a["cut"]["w"]) + a["cut"]["b"]
-    return lv, lc
+    ls = None
+    if "srv" in a:
+        ls = jnp.einsum("no,nos->ns", hu, a["srv"]["w"]) + a["srv"]["b"]
+    return lv, lc, ls
 
 
 def critic_apply(params, obs_flat):
@@ -84,26 +95,35 @@ def _mask_logits(logits, valid):
 
 
 def sample_actions(params, obs_flat, valid_v, rng):
-    lv, lc = actor_apply(params, obs_flat)
+    lv, lc, ls = actor_apply(params, obs_flat)
     lv = _mask_logits(lv, valid_v)
-    k1, k2 = jax.random.split(rng)
+    if ls is None:
+        k1, k2 = jax.random.split(rng)
+    else:
+        k1, k2, k3 = jax.random.split(rng, 3)
     av = jax.random.categorical(k1, lv, axis=-1)
     ac_ = jax.random.categorical(k2, lc, axis=-1)
-    return jnp.stack([av, ac_], axis=-1).astype(jnp.int32)
+    cols = [av, ac_]
+    if ls is not None:
+        cols.append(jax.random.categorical(k3, ls, axis=-1))
+    return jnp.stack(cols, axis=-1).astype(jnp.int32)
 
 
 def greedy_actions(params, obs_flat, valid_v):
-    lv, lc = actor_apply(params, obs_flat)
+    lv, lc, ls = actor_apply(params, obs_flat)
     lv = _mask_logits(lv, valid_v)
-    return jnp.stack([jnp.argmax(lv, -1), jnp.argmax(lc, -1)],
-                     axis=-1).astype(jnp.int32)
+    cols = [jnp.argmax(lv, -1), jnp.argmax(lc, -1)]
+    if ls is not None:
+        cols.append(jnp.argmax(ls, -1))
+    return jnp.stack(cols, axis=-1).astype(jnp.int32)
 
 
 def device_logp_entropy(params, obs_flat, actions, valid_v):
     """Per-device (log-prob, entropy) of the taken actions, shape (n,)
     each — the per-UAV terms ``logp_entropy`` sums; the online learner
-    (repro.online.adapt) weights them by per-device advantages."""
-    lv, lc = actor_apply(params, obs_flat)
+    (repro.online.adapt) weights them by per-device advantages. In
+    cluster mode the factored policy adds the server head's terms."""
+    lv, lc, ls = actor_apply(params, obs_flat)
     lv = _mask_logits(lv, valid_v)
     logp_v = jax.nn.log_softmax(lv, -1)
     logp_c = jax.nn.log_softmax(lc, -1)
@@ -111,6 +131,10 @@ def device_logp_entropy(params, obs_flat, actions, valid_v):
           + jnp.take_along_axis(logp_c, actions[:, 1:2], -1)[:, 0])
     ent = (-jnp.sum(jnp.exp(logp_v) * logp_v, -1)
            - jnp.sum(jnp.exp(logp_c) * logp_c, -1))
+    if ls is not None:
+        logp_s = jax.nn.log_softmax(ls, -1)
+        lp = lp + jnp.take_along_axis(logp_s, actions[:, 2:3], -1)[:, 0]
+        ent = ent - jnp.sum(jnp.exp(logp_s) * logp_s, -1)
     return lp, ent
 
 

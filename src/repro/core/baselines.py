@@ -18,52 +18,77 @@ from repro.core import pricing
 from repro.core.env import EnvConfig, ProfileTables
 
 
+def _with_server(cfg: EnvConfig, actions, srv=None):
+    """Append a server column when the env runs in cluster mode; static
+    baselines default to server 0 (the conventional primary target)."""
+    if cfg.cluster is None:
+        return actions
+    n = actions.shape[0]
+    if srv is None:
+        srv = jnp.zeros((n,), jnp.int32)
+    return jnp.concatenate([actions, srv[:, None].astype(jnp.int32)], -1)
+
+
 def device_only(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
     """Lightweight version, run everything locally (last cut)."""
     n = cfg.n_uavs
-    return jnp.stack([jnp.zeros((n,), jnp.int32),
-                      jnp.full((n,), tables.n_cuts - 1, jnp.int32)], -1)
+    a = jnp.stack([jnp.zeros((n,), jnp.int32),
+                   jnp.full((n,), tables.n_cuts - 1, jnp.int32)], -1)
+    return _with_server(cfg, a)
 
 
 def full_offload(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
     """Heavy version, cut as early as possible."""
     n = cfg.n_uavs
     j = (tables.version_valid[state["model_id"]].sum(-1) - 1).astype(jnp.int32)
-    return jnp.stack([j, jnp.zeros((n,), jnp.int32)], -1)
+    return _with_server(cfg, jnp.stack([j, jnp.zeros((n,), jnp.int32)], -1))
 
 
 def random_policy(cfg: EnvConfig, tables: ProfileTables, state, rng):
-    """Uniform over each device's *valid* versions and all cuts. Sampling
-    randint(0, n_versions) % nv would bias toward low version indices
-    whenever a model has fewer versions than the padded table width;
-    randint takes a per-device maxval, so sample [0, nv) directly."""
+    """Uniform over each device's *valid* versions and all cuts (and, in
+    cluster mode, servers). Sampling randint(0, n_versions) % nv would
+    bias toward low version indices whenever a model has fewer versions
+    than the padded table width; randint takes a per-device maxval, so
+    sample [0, nv) directly."""
     n = cfg.n_uavs
-    k1, k2 = jax.random.split(rng)
+    k1, k2, k3 = jax.random.split(rng, 3)
     nv = tables.version_valid[state["model_id"]].sum(-1).astype(jnp.int32)
     j = jax.random.randint(k1, (n,), 0, nv)
     k = jax.random.randint(k2, (n,), 0, tables.n_cuts)
-    return jnp.stack([j, k], -1).astype(jnp.int32)
+    a = jnp.stack([j, k], -1).astype(jnp.int32)
+    if cfg.cluster is None:
+        return a
+    srv = jax.random.randint(k3, (n,), 0, cfg.cluster.n_servers)
+    return _with_server(cfg, a, srv)
 
 
 def greedy_oracle(cfg: EnvConfig, tables: ProfileTables, state, rng=None):
-    """Per-step per-UAV reward argmax over all (j, k). Canonical registry
-    name: ``greedy_oracle`` (repro.policies)."""
+    """Per-step per-UAV reward argmax over all (j, k) — and over the
+    server axis too in cluster mode. Canonical registry name:
+    ``greedy_oracle`` (repro.policies)."""
     n = cfg.n_uavs
     V, K = tables.n_versions, tables.n_cuts
+    S = 1 if cfg.cluster is None else cfg.cluster.n_servers
     w = cfg.weights
     view = pricing.view_from_state(state)
 
-    jj, kk = jnp.meshgrid(jnp.arange(V), jnp.arange(K), indexing="ij")
-    pairs = jnp.stack([jj.ravel(), kk.ravel()], -1).astype(jnp.int32)  # (VK,2)
+    if cfg.cluster is None:
+        jj, kk = jnp.meshgrid(jnp.arange(V), jnp.arange(K), indexing="ij")
+        cands = jnp.stack([jj.ravel(), kk.ravel()], -1)          # (VK, 2)
+    else:
+        jj, kk, ss = jnp.meshgrid(jnp.arange(V), jnp.arange(K),
+                                  jnp.arange(S), indexing="ij")
+        cands = jnp.stack([jj.ravel(), kk.ravel(), ss.ravel()], -1)
+    cands = cands.astype(jnp.int32)                              # (VKS, A)
 
-    def score(pair):
-        actions = jnp.tile(pair[None], (n, 1))
+    def score(cand):
+        actions = jnp.tile(cand[None], (n, 1))
         br = pricing.price_actions(cfg, tables, view, actions)
-        valid = tables.version_valid[state["model_id"], pair[0]]
+        valid = tables.version_valid[state["model_id"], cand[0]]
         s = (w.w_acc * br.acc_score + w.w_lat * br.lat_score
              + w.w_energy * br.energy_score + w.w_stab * br.stab_score)
         return jnp.where(valid > 0, s, -jnp.inf)
 
-    scores = jax.vmap(score)(pairs)          # (VK, n)
+    scores = jax.vmap(score)(cands)          # (VKS, n)
     best = jnp.argmax(scores, axis=0)        # (n,)
-    return pairs[best]
+    return cands[best]

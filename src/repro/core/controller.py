@@ -171,7 +171,10 @@ def measured_state(cfg: EnvConfig, tables: ProfileTables, *,
         "model_id": jnp.asarray(model_id, jnp.int32),
         "activity": jnp.asarray(activity, jnp.float32),
         "bandwidth": jnp.asarray(bandwidth, jnp.float32),
-        "queue": jnp.float32(queue_jobs),
+        # cluster mode measures one depth per server ((S,)); the classic
+        # scalar path is kept exactly as-is for bit-stable decides
+        "queue": (jnp.asarray(queue_jobs, jnp.float32)
+                  if np.ndim(queue_jobs) else jnp.float32(queue_jobs)),
         "t": jnp.int32(t),
     }
 
@@ -222,7 +225,7 @@ def evaluate_policy(cfg: EnvConfig, tables: ProfileTables,
         (_, rng), tr = jax.lax.scan(step, (state0, rng), None,
                                     length=cfg.episode_len)
         m = tr.pop("model_id").reshape(-1)
-        a = tr.pop("actions").reshape(-1, 2)
+        a = tr.pop("actions").reshape(-1, cfg.action_dim)
         alive = tr.pop("alive").reshape(-1)
         hist = jnp.zeros((M, V, K)).at[m, a[:, 0], a[:, 1]].add(alive)
         return rng, hist, {k: jnp.sum(v) for k, v in tr.items()}

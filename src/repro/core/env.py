@@ -15,12 +15,13 @@ dict-of-arrays state, so whole A2C episodes run inside one jit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.pool import ClusterParams
 from repro.core import energy as en
 from repro.core import latency as lat
 from repro.core import pricing
@@ -61,6 +62,12 @@ class EnvConfig:
     # the request-level capacity signal the per-slot paper scores lack
     # (weighted by RewardWeights.w_stab; 0 keeps the paper's reward).
     peak_rps: float = 0.0
+    # Heterogeneous server pool + device->server link matrix
+    # (repro.cluster). None keeps the classic single-server MDP with
+    # (version, cut) actions; set, it widens actions to (version, cut,
+    # server), makes the queue state per-server, and reprices Eq. 2-4
+    # per chosen target through the same pricing core.
+    cluster: Optional[ClusterParams] = None
     power: en.DevicePower = dataclasses.field(default_factory=en.DevicePower)
     latency: lat.LatencyParams = dataclasses.field(
         default_factory=lat.LatencyParams)
@@ -68,8 +75,18 @@ class EnvConfig:
         default_factory=rw.RewardWeights)
 
     @property
+    def n_servers(self) -> int:
+        return 1 if self.cluster is None else self.cluster.n_servers
+
+    @property
+    def action_dim(self) -> int:
+        return 2 if self.cluster is None else 3
+
+    @property
     def obs_dim_per_uav(self) -> int:
-        return len(OBS_FEATURES)
+        # cluster mode widens the single "queue" feature to one column
+        # per server (the controller sees every server's depth)
+        return len(OBS_FEATURES) + (self.n_servers - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,7 +157,8 @@ def env_reset(cfg: EnvConfig, tables: ProfileTables, rng,
         "model_id": model_ids,
         "activity": jnp.tile(jnp.asarray(cfg.activity)[None], (n, 1)),
         "bandwidth": bw,
-        "queue": jnp.float32(0.0),
+        "queue": (jnp.float32(0.0) if cfg.cluster is None
+                  else jnp.zeros((cfg.cluster.n_servers,), jnp.float32)),
         "t": jnp.int32(0),
     }
 
@@ -160,19 +178,26 @@ def _obs_features(cfg: EnvConfig, tables: ProfileTables, state) -> Dict:
         "act_rotate": state["activity"][:, 2],
         "bandwidth": (state["bandwidth"] - l.bw_min_bps)
         / (l.bw_max_bps - l.bw_min_bps),
-        "queue": jnp.broadcast_to(state["queue"] / 20.0,
-                                  state["task"].shape),
+        # cluster mode: one column per server ((n, S)); classic: (n,)
+        "queue": jnp.broadcast_to(
+            state["queue"] / 20.0,
+            state["task"].shape if cfg.cluster is None
+            else (state["task"].shape[0], cfg.cluster.n_servers)),
     }
 
 
 def observe(cfg: EnvConfig, tables: ProfileTables, state) -> jnp.ndarray:
     """(n_uavs, obs_dim_per_uav) normalized observation (Eq. 6 +
     bandwidth/queue, which the controller measures). Feature order is
-    OBS_FEATURES — the single source of truth for the A2C input width."""
+    OBS_FEATURES — the single source of truth for the A2C input width;
+    in cluster mode the "queue" feature contributes one column per
+    server (obs_dim_per_uav accounts for the widening)."""
     feats = _obs_features(cfg, tables, state)
     assert set(feats) == set(OBS_FEATURES), (
         sorted(feats), sorted(OBS_FEATURES))
-    return jnp.stack([feats[k] for k in OBS_FEATURES], axis=-1)
+    cols = [feats[k][:, None] if feats[k].ndim == 1 else feats[k]
+            for k in OBS_FEATURES]
+    return jnp.concatenate(cols, axis=-1)
 
 
 def action_costs(cfg: EnvConfig, tables: ProfileTables, state, actions):
@@ -240,11 +265,28 @@ def env_step(cfg: EnvConfig, tables: ProfileTables, state, actions, rng,
                   * jnp.exp(jax.random.normal(k1, state["bandwidth"].shape)
                             * 0.15),
                   lpar.bw_min_bps, lpar.bw_max_bps)
-    if arrivals is None:
-        arrivals = jax.random.poisson(k2, cfg.queue_arrival_rate)
-    arrivals = jnp.asarray(arrivals).astype(jnp.float32)
-    queue = jnp.maximum(state["queue"] + arrivals
-                        - cfg.queue_service_per_slot, 0.0)
+    if cfg.cluster is None:
+        if arrivals is None:
+            arrivals = jax.random.poisson(k2, cfg.queue_arrival_rate)
+        arrivals = jnp.asarray(arrivals).astype(jnp.float32)
+        queue = jnp.maximum(state["queue"] + arrivals
+                            - cfg.queue_service_per_slot, 0.0)
+    else:
+        # per-server background dynamics at the nominal operating point
+        # (initial replicas / top DVFS): traces inject a *total* arrival
+        # count, split across servers by bg_arrival_scale
+        c = cfg.cluster
+        bg_a = jnp.asarray(c.bg_arrival_scale)
+        if arrivals is None:
+            arrivals = jax.random.poisson(k2, cfg.queue_arrival_rate * bg_a)
+        else:
+            arrivals = jnp.asarray(arrivals) * bg_a
+        arrivals = jnp.asarray(arrivals).astype(jnp.float32)
+        speed = jnp.asarray([r * d[-1]
+                             for r, d in zip(c.replicas, c.dvfs)])
+        drain = cfg.queue_service_per_slot \
+            * jnp.asarray(c.bg_service_scale) * speed
+        queue = jnp.maximum(state["queue"] + arrivals - drain, 0.0)
     if next_task is None:
         task = jax.random.bernoulli(k3, cfg.task_prob,
                                     state["task"].shape).astype(jnp.float32)

@@ -41,12 +41,22 @@ class StateView:
     (``view_from_state``), fleet measurements, and vmapped batches all
     project onto it; per-device arrays are (n,), ``queue`` is the shared
     server queue depth (jobs) and ``load`` the offered-load fraction of
-    ``cfg.peak_rps`` in [0, 1] (the env's generalized task feature)."""
+    ``cfg.peak_rps`` in [0, 1] (the env's generalized task feature).
+
+    Cluster mode (actions carry a server column): ``queue`` becomes the
+    per-server depth (S,), and the optional per-server fields override
+    the nominal service/link arrays derived from ``cfg.cluster`` — the
+    fleet loop passes the pool's *live* autoscaler state through them
+    while training envs price at the nominal operating point."""
     model_id: object
     bandwidth: object
     p_tx: object
     queue: object
     load: object
+    srv_flops: object = None       # (S,) effective tail FLOP/s
+    srv_service_s: object = None   # (S,) background-job service seconds
+    link_scale: object = None      # (n, S) bandwidth multiplier
+    link_rtt_s: object = None      # (n, S) per-transfer delay, seconds
 
 
 def view_from_state(state) -> StateView:
@@ -159,8 +169,9 @@ def numpy_tables(tables):
 
 def price_actions(cfg, tables, view: StateView, actions,
                   xp=jnp) -> PricingBreakdown:
-    """Price actions (..., 2) = (version j, cut index l) for the devices
-    in ``view`` under ``cfg`` (EnvConfig). ``tables``' arrays must live
+    """Price actions (..., 2) = (version j, cut index l) — or (..., 3)
+    = (version, cut, server) in cluster mode — for the devices in
+    ``view`` under ``cfg`` (EnvConfig). ``tables``' arrays must live
     in the ``xp`` namespace (``numpy_tables`` snapshots them for np).
 
     The server-side term (queue wait) is gated on a tail actually
@@ -190,14 +201,43 @@ def price_actions(cfg, tables, view: StateView, actions,
 
     lp, pw, w = cfg.latency, cfg.power, cfg.weights
     head_s = local_time(lp, head, xp)
-    tx_s = transmit_time(view.bandwidth, wire_bytes, xp)
-    tail_s = tail / lp.server_flops
     offloaded = tail > 0.0
-    queue_s = xp.where(offloaded, view.queue * lp.job_service_s, 0.0)
+    if actions.shape[-1] == 3:
+        # Cluster mode: the server column reprices the link (Eq. 2/3)
+        # and the server-side queue/tail (Eq. 4) against the chosen
+        # target. The trailing action dim is static under jit/vmap, so
+        # this branch traces cleanly; oracle grids batch as (VKS, n, 3)
+        # and the device index broadcasts against them.
+        srv = actions[..., 2]
+        dev = xp.arange(actions.shape[-2])
+        srv_flops, srv_service_s = view.srv_flops, view.srv_service_s
+        if srv_flops is None:
+            srv_flops, srv_service_s = cfg.cluster.nominal(lp, xp)
+        # compute in the tables' dtype: the legacy branch divides the
+        # float32 tables by *python-float* LatencyParams scalars, which
+        # stays float32 under weak promotion — a float64 per-server
+        # array would silently promote and break single-server parity
+        srv_flops = xp.asarray(srv_flops, dtype=tail.dtype)
+        srv_service_s = xp.asarray(srv_service_s, dtype=tail.dtype)
+        link_scale = (view.link_scale if view.link_scale is not None
+                      else xp.asarray(cfg.cluster.link_scale))
+        link_rtt_s = (view.link_rtt_s if view.link_rtt_s is not None
+                      else xp.asarray(cfg.cluster.link_rtt_s))
+        bw = view.bandwidth * link_scale[dev, srv]
+        tx_s = transmit_time(bw, wire_bytes, xp) + link_rtt_s[dev, srv]
+        tail_s = tail / srv_flops[srv]
+        q = xp.asarray(view.queue)
+        q_dev = q[srv] if q.ndim else q
+        queue_s = xp.where(offloaded, q_dev * srv_service_s[srv], 0.0)
+    else:
+        bw = view.bandwidth
+        tx_s = transmit_time(bw, wire_bytes, xp)
+        tail_s = tail / lp.server_flops
+        queue_s = xp.where(offloaded, view.queue * lp.job_service_s, 0.0)
     t_total = head_s + tx_s + queue_s + tail_s
 
     energy_j = (compute_energy(pw, head_s, xp)
-                + transmit_energy(view.p_tx, view.bandwidth, wire_bytes, xp))
+                + transmit_energy(view.p_tx, bw, wire_bytes, xp))
     t_full_local = local_time(lp, full, xp)
     e_full_local = compute_energy(pw, t_full_local, xp)
 

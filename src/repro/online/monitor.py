@@ -95,12 +95,21 @@ def oracle_reward(env_cfg, np_tables, view: pricing.StateView,
     every (version, cut) pair for every device through the numpy pricing
     core and average each alive device's best weighted score — exactly
     ``baselines.greedy_oracle``'s objective (Eq. 8 argmax), under
-    whatever regime config the schedule has installed."""
+    whatever regime config the schedule has installed. Cluster-mode
+    envs widen the grid to every (version, cut, server) triple."""
     V, K = np_tables.n_versions, np_tables.n_cuts
-    jj, kk = np.meshgrid(np.arange(V), np.arange(K), indexing="ij")
-    pairs = np.stack([jj.ravel(), kk.ravel()], -1).astype(np.int32)
+    if env_cfg.cluster is None:
+        jj, kk = np.meshgrid(np.arange(V), np.arange(K), indexing="ij")
+        pairs = np.stack([jj.ravel(), kk.ravel()], -1).astype(np.int32)
+    else:
+        S = env_cfg.cluster.n_servers
+        jj, kk, ss = np.meshgrid(np.arange(V), np.arange(K),
+                                 np.arange(S), indexing="ij")
+        pairs = np.stack([jj.ravel(), kk.ravel(), ss.ravel()],
+                         -1).astype(np.int32)
     n = np.asarray(view.model_id).shape[0]
-    actions = np.broadcast_to(pairs[:, None, :], (V * K, n, 2))
+    actions = np.broadcast_to(pairs[:, None, :],
+                              (pairs.shape[0], n, pairs.shape[1]))
     br = pricing.price_actions(env_cfg, np_tables, view, actions, xp=np)
     w = env_cfg.weights
     s = (w.w_acc * br.acc_score + w.w_lat * br.lat_score

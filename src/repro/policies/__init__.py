@@ -4,6 +4,8 @@ Importing this package registers the full roster:
 
 - static:    ``device_only``, ``full_offload``, ``random``,
              ``greedy_oracle``
+- routers:   ``round_robin``, ``join_shortest_queue``, ``local_only``
+             (cluster-mode envs only; repro.cluster.routers)
 - trainable: ``a2c`` (the paper's controller), ``ppo`` (ablation)
 
 ``build_policy(name, env_cfg, tables, **kw)`` is the one entry point;
@@ -13,6 +15,8 @@ from repro.policies.base import (Policy, PolicySpec, build_policy,
                                  get_policy_spec, policy_names, register)
 from repro.policies.static import StaticPolicy
 from repro.policies.trainable import A2CPolicy, PPOPolicy, TrainablePolicy
+
+import repro.cluster.routers  # noqa: F401  (registers the router roster)
 
 __all__ = [
     "Policy", "PolicySpec", "StaticPolicy", "TrainablePolicy",

@@ -46,6 +46,20 @@ class Scenario:
     bw_max_bps: Optional[float] = 1e9
     bw_min_bps: Optional[float] = None
 
+    # --- server cluster (repro.cluster; paper env only) --------------------
+    # named pool preset (cluster.get_pool) -> heterogeneous server pool;
+    # None keeps the classic single-server world with (version, cut)
+    # actions. With a pool, actions widen to (version, cut, server) and
+    # the topology preset prices each device->server link.
+    pool: Optional[str] = None
+    pool_kw: Dict = dataclasses.field(default_factory=dict)
+    topology: str = "uniform"
+    topology_kw: Dict = dataclasses.field(default_factory=dict)
+    # named autoscaler policy over the pool ("threshold"|"hysteresis");
+    # None pins replicas/DVFS at the nominal operating point
+    autoscale: Optional[str] = None
+    autoscale_kw: Dict = dataclasses.field(default_factory=dict)
+
     # --- workload ---------------------------------------------------------
     trace: str = "mmpp"
     trace_kw: Dict = dataclasses.field(default_factory=dict)
@@ -106,6 +120,27 @@ class Scenario:
         from repro.online import OnlineConfig
         return OnlineConfig(algo=algo, **self.online_kw)
 
+    def build_cluster(self):
+        """ClusterParams from the pool/topology presets, or None."""
+        if self.pool is None:
+            return None
+        from repro.cluster import build_cluster, get_pool, get_topology
+        servers = get_pool(self.pool, **self.pool_kw)
+        topo = get_topology(self.topology, self.devices, len(servers),
+                            **self.topology_kw)
+        return build_cluster(servers, topo)
+
+    def build_autoscaler(self):
+        """AutoscalerConfig for the fleet's ServerPool, or None."""
+        if self.autoscale is None:
+            return None
+        if self.pool is None:
+            raise ValueError(f"scenario {self.name!r} sets autoscale="
+                             f"{self.autoscale!r} without a server pool")
+        from repro.cluster import AutoscalerConfig
+        return AutoscalerConfig(policy=self.autoscale,
+                                **self.autoscale_kw)
+
     def build_train_trace(self) -> Optional[Trace]:
         """The load process trainable policies see; None under the
         paper-faithful reward (peak_rps == 0 -> Bernoulli task draws)."""
@@ -137,6 +172,9 @@ class Scenario:
         if self.battery_wh is not None:
             from repro.core.energy import DevicePower
             env_kw["power"] = DevicePower(battery_wh=self.battery_wh)
+        cluster = self.build_cluster()
+        if cluster is not None:
+            env_kw["cluster"] = cluster
         env_cfg, tables = make_paper_env(
             weights=self.weights, n_uavs=self.devices,
             latency=LatencyParams(**lat_kw),
@@ -159,6 +197,10 @@ class Scenario:
 
         from repro.configs import get_config
 
+        if self.pool is not None:
+            raise ValueError("server pools (Scenario.pool) model the "
+                             "paper env's edge cluster; the tpu env's "
+                             "tail submesh is a single shared server")
         archs = [self.arch] * self.devices
         env_cfg, tables = make_tpu_env(
             archs, weights=self.weights, reduced=True,

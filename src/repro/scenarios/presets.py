@@ -155,6 +155,44 @@ register_scenario(Scenario(
     policies=("a2c+online", "a2c", "device_only", "full_offload"),
     episodes=300, entropy_coef=0.03, batch_envs=4))
 
+# -- server clusters (repro.cluster): heterogeneous pools, learned
+# -- routing over the widened (version, cut, server) action space ----------
+
+register_scenario(Scenario(
+    name="edge-cluster",
+    description="heterogeneous 4-server edge pool (1x..0.2x tiers) "
+                "behind a near-far radio topology with hysteresis "
+                "autoscaling; A2C learns (version, cut, server) "
+                "end-to-end against the classic dispatch routers",
+    devices=8, models="cycle",
+    pool="hetero-4", topology="near-far",
+    autoscale="hysteresis",
+    trace="mmpp", trace_kw={"rate_low_rps": 2.0, "rate_high_rps": 25.0},
+    slot_seconds=10.0, peak_rps=30.0, slo_s=2.0,
+    seeds=(0, 1, 2), n_requests=20_000,
+    policies=("a2c", "round_robin", "join_shortest_queue", "local_only"),
+    episodes=400, entropy_coef=0.03, batch_envs=4))
+
+register_scenario(Scenario(
+    name="cluster-brownout",
+    description="flash crowd over the heterogeneous pool: offered rate "
+                "jumps 1.75x and the servers' background workload "
+                "surges 6x from epoch 50, relaxing at 220 — job-count "
+                "JSQ misreads the slow tiers as cheap while the learned "
+                "router prices depth x service rate per target",
+    devices=8, models="cycle", battery_wh=200.0,
+    pool="hetero-4", topology="near-far",
+    autoscale="hysteresis",
+    trace="poisson", trace_kw={"rate_rps": 8.0},
+    slot_seconds=10.0, peak_rps=30.0, slo_s=2.0,
+    drift="flash-crowd",
+    drift_kw={"onset": 50, "relax": 220, "scale": 1.75,
+              "queue_scale": 6.0},
+    seeds=(0, 1), n_requests=60_000,
+    policies=("a2c", "round_robin", "join_shortest_queue",
+              "device_only"),
+    episodes=400, entropy_coef=0.03, batch_envs=4))
+
 register_scenario(Scenario(
     name="megafleet",
     description="mega-fleet scale: 100k devices under a diurnal load "

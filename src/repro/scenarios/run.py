@@ -206,6 +206,7 @@ def run_scenario(scenario: Scenario,
         env_cfg, tables, model_ids, backend_factory = scenario.build_env()
         trace = scenario.build_trace()
         schedule = scenario.build_schedule()
+        autoscaler = scenario.build_autoscaler()
     fleet = FleetConfig(slo_s=scenario.slo_s, engine=scenario.engine)
 
     # verbose routes the narration at info level (console by default,
@@ -277,7 +278,8 @@ def run_scenario(scenario: Scenario,
                                n_requests=n_req, seed=seed, fleet=fleet,
                                backend=backend_factory(),
                                model_ids=model_ids,
-                               schedule=schedule, online=online_cfg)
+                               schedule=schedule, online=online_cfg,
+                               autoscaler=autoscaler)
             per_seed.append(res.summary)
             if res.adaptation is not None:
                 per_adapt.append(res.adaptation)

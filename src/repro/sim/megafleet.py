@@ -127,8 +127,11 @@ def numpy_queues(counts, alive, free_at, pr, srv_wait, t_now,
     pad, valid = padded_offsets(counts, u, slot_seconds)
     pad += t_now          # == t_now + sort(u): the loop's exact values
     offs = pad
+    # scalar (classic) or (n,) per-device routed-server wait (cluster):
+    # the latter broadcasts as a column over the (n, C) layout
+    sw = srv_wait[:, None] if np.ndim(srv_wait) else srv_wait
     lat, done = lindley_core(np, offs, free_at, pr.head_s + pr.tx_s,
-                             pr.tail_s, pr.offloaded, srv_wait)
+                             pr.tail_s, pr.offloaded, sw)
     upd = alive & (counts > 0)
     last = np.take_along_axis(done, np.maximum(counts - 1, 0)[:, None],
                               axis=1)[:, 0]

@@ -1,0 +1,430 @@
+"""repro.cluster: pool/topology/autoscaler units, the degenerate
+1-server bit-parity guarantee against the classic single-server fleet
+(engines loop and vectorized), server-axis pricing parity numpy≡jnp,
+router baselines over the widened (version, cut, server) action space,
+and the cluster scenario presets."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (Autoscaler, AutoscalerConfig, ServerPool,
+                           ServerSpec, build_cluster, get_pool,
+                           get_topology, pool_names, topology_names)
+from repro.core import (A2CConfig, env_reset, env_step, init_agent,
+                        make_paper_env)
+from repro.core import pricing
+from repro.core.actor_critic import greedy_actions, sample_actions
+from repro.core.env import OBS_FEATURES, observe
+from repro.core.latency import LatencyParams
+from repro.policies import get_policy_spec, policy_names
+from repro.sim import AnalyticalBackend, FleetConfig, get_trace, simulate
+
+
+def _cluster(pool="single", topology="uniform", devices=4):
+    servers = get_pool(pool)
+    return build_cluster(servers,
+                         get_topology(topology, devices, len(servers)))
+
+
+def _cluster_env(pool="hetero-4", topology="near-far", devices=4, **kw):
+    return make_paper_env(
+        n_uavs=devices,
+        latency=LatencyParams(server_flops=devices * 0.55e12,
+                              bw_max_bps=1e9),
+        slot_seconds=10.0, peak_rps=30.0, frames_per_slot=300.0,
+        cluster=_cluster(pool, topology, devices), **kw)
+
+
+# --------------------------------------------------------------------------
+# registries: the KeyError-listing convention
+# --------------------------------------------------------------------------
+
+def test_pool_registry_miss_lists_valid_names():
+    assert {"single", "uniform-4", "hetero-4"} <= set(pool_names())
+    with pytest.raises(KeyError) as e:
+        get_pool("no-such-pool")
+    for name in pool_names():
+        assert name in str(e.value)
+
+
+def test_topology_registry_miss_lists_valid_names():
+    assert {"uniform", "near-far", "tiered"} <= set(topology_names())
+    with pytest.raises(KeyError) as e:
+        get_topology("no-such-topology", 4, 2)
+    for name in topology_names():
+        assert name in str(e.value)
+
+
+def test_build_cluster_rejects_server_count_mismatch():
+    servers = get_pool("hetero-4")
+    with pytest.raises(ValueError, match="4 servers"):
+        build_cluster(servers[:2], get_topology("uniform", 4, 4))
+
+
+def test_routers_registered_as_policies():
+    assert {"round_robin", "join_shortest_queue",
+            "local_only"} <= set(policy_names())
+
+
+def test_router_rejects_non_cluster_env():
+    env_cfg, tables = make_paper_env()
+    with pytest.raises(ValueError, match="cluster-mode env"):
+        get_policy_spec("round_robin").build(env_cfg, tables)
+
+
+# --------------------------------------------------------------------------
+# pool / autoscaler units
+# --------------------------------------------------------------------------
+
+def test_pool_effective_matches_nominal_at_initial_state():
+    cluster = _cluster("hetero-4", "near-far")
+    env_cfg, _ = _cluster_env()
+    pool = ServerPool(cluster)
+    eff = pool.effective(env_cfg.latency, env_cfg)
+    flops, service = cluster.nominal(env_cfg.latency, xp=np)
+    np.testing.assert_array_equal(eff.flops, flops)
+    np.testing.assert_array_equal(eff.service_s, service)
+
+
+def test_pool_meters_replica_energy_cubed_in_dvfs():
+    spec = ServerSpec(dvfs=(0.5, 1.0), p_replica_w=40.0, replicas=2,
+                      max_replicas=2)
+    cluster = build_cluster((spec,), get_topology("uniform", 1, 1))
+    pool = ServerPool(cluster)
+    pool.tick(np.zeros(1), slot_seconds=10.0)   # 2 replicas at dvfs 1.0
+    assert pool.energy_j == pytest.approx(40.0 * 2 * 1.0 ** 3 * 10.0)
+    pool.dvfs_idx[:] = 0                        # walk down the ladder
+    pool.tick(np.zeros(1), slot_seconds=10.0)
+    assert pool.energy_j == pytest.approx(
+        40.0 * 2 * 10.0 + 40.0 * 2 * 0.5 ** 3 * 10.0)
+    assert pool.summary()["mean_replicas"] == 2.0
+
+
+def test_autoscaler_threshold_scales_dvfs_first_then_replicas():
+    spec = ServerSpec(dvfs=(0.6, 1.0), max_replicas=2, p_replica_w=45.0)
+    cluster = build_cluster((spec,), get_topology("uniform", 1, 1))
+    pool = ServerPool(cluster)
+    pool.dvfs_idx[:] = 0    # start below the top DVFS step
+    asc = Autoscaler(AutoscalerConfig(policy="threshold"), 1)
+    deep = np.asarray([50.0])
+    assert asc.step(pool, deep) == 1
+    assert pool.dvfs_idx[0] == 1 and pool.replicas[0] == 1   # DVFS first
+    assert asc.step(pool, deep) == 1
+    assert pool.replicas[0] == 2                             # then replica
+    assert asc.step(pool, deep) == 0                         # at capacity
+
+
+def test_autoscaler_threshold_scales_down_replicas_first():
+    spec = ServerSpec(dvfs=(0.6, 1.0), replicas=2, max_replicas=2)
+    cluster = build_cluster((spec,), get_topology("uniform", 1, 1))
+    pool = ServerPool(cluster)
+    asc = Autoscaler(AutoscalerConfig(policy="threshold"), 1)
+    idle = np.asarray([0.0])
+    assert asc.step(pool, idle) == 1
+    assert pool.replicas[0] == 1 and pool.dvfs_idx[0] == 1   # replica first
+    assert asc.step(pool, idle) == 1
+    assert pool.dvfs_idx[0] == 0                             # then DVFS
+    assert asc.step(pool, idle) == 0                         # at the floor
+
+
+def test_autoscaler_hysteresis_waits_for_patience_then_cools_down():
+    spec = ServerSpec(dvfs=(0.6, 1.0), max_replicas=2)
+    cluster = build_cluster((spec,), get_topology("uniform", 1, 1))
+    pool = ServerPool(cluster)
+    pool.dvfs_idx[:] = 0
+    asc = Autoscaler(AutoscalerConfig(policy="hysteresis", patience=3,
+                                      cooldown=2), 1)
+    deep = np.asarray([50.0])
+    assert asc.step(pool, deep) == 0      # breach 1
+    assert asc.step(pool, deep) == 0      # breach 2
+    assert asc.step(pool, deep) == 1      # breach 3: acts
+    assert pool.dvfs_idx[0] == 1
+    assert asc.step(pool, deep) == 0      # cooldown epoch 1
+    assert asc.step(pool, deep) == 0      # cooldown epoch 2
+    # the breach never cleared: streak rode through the hold, so the
+    # first post-cooldown epoch escalates (replica, DVFS already topped)
+    assert asc.step(pool, deep) == 1
+    assert pool.replicas[0] == 2
+    # a calm epoch resets the streak: no further action
+    asc.step(pool, np.asarray([0.0]))
+    assert pool.replicas[0] == 2
+
+
+def test_autoscaler_config_validates():
+    with pytest.raises(ValueError, match="valid policies"):
+        AutoscalerConfig(policy="magic")
+    with pytest.raises(ValueError, match="down_queue"):
+        AutoscalerConfig(up_queue=2.0, down_queue=2.0)
+
+
+# --------------------------------------------------------------------------
+# tentpole guarantee: a 1-server pool at uniform topology is the classic
+# single-server fleet, bit for bit
+# --------------------------------------------------------------------------
+
+def _fleet_run(cluster, policy_name, engine, n_requests=2500, seed=0):
+    kw = {"cluster": cluster} if cluster is not None else {}
+    env_cfg, tables = make_paper_env(
+        n_uavs=4, latency=LatencyParams(server_flops=4 * 0.55e12,
+                                        bw_max_bps=1e9),
+        slot_seconds=10.0, peak_rps=30.0, frames_per_slot=300.0, **kw)
+    model_ids = np.arange(4, dtype=np.int32) % tables.n_models
+    policy = get_policy_spec(policy_name).build(env_cfg, tables)
+    trace = get_trace("mmpp", rate_low_rps=2.0, rate_high_rps=25.0)
+    return simulate(env_cfg, tables, model_ids=model_ids, policy=policy,
+                    trace=trace, n_requests=n_requests, seed=seed,
+                    backend=AnalyticalBackend(env_cfg, tables),
+                    fleet=FleetConfig(slo_s=2.0, engine=engine))
+
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized"])
+@pytest.mark.parametrize("policy", ["greedy_oracle", "full_offload"])
+def test_degenerate_pool_bit_identical_to_single_server(engine, policy):
+    """The whole cluster path (per-server queues, topology repricing,
+    pool-effective service arrays) collapses to exactly the legacy
+    single-server fleet when the pool is one baseline server behind a
+    uniform topology — per-request latencies and every shared summary
+    metric bitwise equal, offloading policies included."""
+    legacy = _fleet_run(None, policy, engine)
+    degen = _fleet_run(_cluster("single", "uniform"), policy, engine)
+    np.testing.assert_array_equal(
+        np.asarray(legacy.metrics.latencies_s),
+        np.asarray(degen.metrics.latencies_s))
+    shared = set(legacy.summary) & set(degen.summary)
+    assert shared >= {"mean", "p95", "slo_attainment", "energy_j"} \
+        or shared  # schema drift guard: at minimum the dicts overlap
+    for k in sorted(shared):
+        assert legacy.summary[k] == degen.summary[k], k
+    # cluster-only meters ride along without perturbing the physics
+    assert {"server_energy_j", "scale_events",
+            "mean_replicas"} <= set(degen.summary)
+
+
+def test_cluster_fleet_bit_reproducible_with_autoscaler():
+    cluster = _cluster("hetero-4", "near-far")
+    runs = []
+    for _ in range(2):
+        env_cfg, tables = _cluster_env()
+        model_ids = np.arange(4, dtype=np.int32) % tables.n_models
+        policy = get_policy_spec("join_shortest_queue").build(env_cfg,
+                                                              tables)
+        res = simulate(env_cfg, tables, model_ids=model_ids, policy=policy,
+                       trace=get_trace("poisson", rate_rps=8.0),
+                       n_requests=2000, seed=0,
+                       backend=AnalyticalBackend(env_cfg, tables),
+                       fleet=FleetConfig(slo_s=2.0),
+                       autoscaler=AutoscalerConfig(policy="hysteresis"))
+        runs.append(res)
+    a, b = runs
+    assert a.summary == b.summary
+    np.testing.assert_array_equal(np.asarray(a.metrics.latencies_s),
+                                  np.asarray(b.metrics.latencies_s))
+    assert a.server_hist is not None
+    assert a.server_hist.shape == (cluster.n_servers,)
+    assert a.server_hist.sum() > 0
+
+
+def test_scan_engine_rejects_cluster_mode():
+    env_cfg, tables = _cluster_env()
+    model_ids = np.arange(4, dtype=np.int32) % tables.n_models
+    policy = get_policy_spec("device_only").build(env_cfg, tables)
+    with pytest.raises(ValueError, match="scan"):
+        simulate(env_cfg, tables, model_ids=model_ids, policy=policy,
+                 trace=get_trace("poisson", rate_rps=8.0),
+                 n_requests=500, seed=0,
+                 backend=AnalyticalBackend(env_cfg, tables),
+                 fleet=FleetConfig(engine="scan"))
+
+
+# --------------------------------------------------------------------------
+# pricing: the server axis, numpy ≡ jnp
+# --------------------------------------------------------------------------
+
+def _cluster_view_actions(cfg, tables, seed, n):
+    r = np.random.default_rng(seed)
+    lp, pw = cfg.latency, cfg.power
+    S = cfg.cluster.n_servers
+    srv_flops, srv_service_s = cfg.cluster.nominal(lp, xp=np)
+    view = pricing.StateView(
+        model_id=r.integers(0, tables.n_models, n).astype(np.int32),
+        bandwidth=r.uniform(lp.bw_min_bps, lp.bw_max_bps, n)
+        .astype(np.float32),
+        p_tx=r.uniform(pw.p_tx_min, pw.p_tx_max, n).astype(np.float32),
+        queue=r.uniform(0.0, 12.0, S).astype(np.float32),
+        load=r.uniform(0.0, 1.0, n).astype(np.float32),
+        srv_flops=srv_flops.astype(np.float32),
+        srv_service_s=srv_service_s.astype(np.float32),
+        link_scale=np.asarray(cfg.cluster.link_scale, np.float32),
+        link_rtt_s=np.asarray(cfg.cluster.link_rtt_s, np.float32))
+    actions = np.stack([r.integers(0, tables.n_versions, n),
+                        r.integers(0, tables.n_cuts, n),
+                        r.integers(0, S, n)], axis=-1).astype(np.int32)
+    return view, actions
+
+
+@pytest.mark.parametrize("n", [1, 8])
+def test_pricing_server_axis_numpy_jnp_parity(n):
+    """Per-server tables + a server action column through xp=np and
+    xp=jnp agree to 1e-6 on every PricingBreakdown field."""
+    cfg, tables = _cluster_env(devices=n)
+    np_tables = pricing.numpy_tables(tables)
+    for seed in (0, 1):
+        view, actions = _cluster_view_actions(cfg, tables, seed, n)
+        br_np = pricing.price_actions(cfg, np_tables, view, actions, xp=np)
+        jview = pricing.StateView(
+            **{f.name: (None if getattr(view, f.name) is None
+                        else jnp.asarray(getattr(view, f.name)))
+               for f in dataclasses.fields(view)})
+        br_j = pricing.price_actions(cfg, tables, jview,
+                                     jnp.asarray(actions), xp=jnp)
+        for f in dataclasses.fields(pricing.PricingBreakdown):
+            x = np.asarray(getattr(br_np, f.name))
+            y = np.asarray(getattr(br_j, f.name))
+            if f.name == "offloaded":
+                np.testing.assert_array_equal(x, y, err_msg=f.name)
+            else:
+                np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6,
+                                           err_msg=f.name)
+
+
+def test_pricing_view_defaults_to_nominal_cluster_arrays():
+    """A cluster view without per-server arrays prices at the nominal
+    operating point (ClusterParams.nominal + the static link matrices)
+    — what env training sees."""
+    cfg, tables = _cluster_env()
+    np_tables = pricing.numpy_tables(tables)
+    view, actions = _cluster_view_actions(cfg, tables, 2, 4)
+    bare = dataclasses.replace(view, srv_flops=None, srv_service_s=None,
+                               link_scale=None, link_rtt_s=None)
+    br_full = pricing.price_actions(cfg, np_tables, view, actions, xp=np)
+    br_bare = pricing.price_actions(cfg, np_tables, bare, actions, xp=np)
+    np.testing.assert_allclose(np.asarray(br_bare.t_total),
+                               np.asarray(br_full.t_total),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pricing_queue_gated_on_chosen_server_tail():
+    """A terminal cut runs no tail on the chosen server: even a deep
+    per-server queue must charge no queue wait to that action."""
+    cfg, tables = _cluster_env()
+    np_tables = pricing.numpy_tables(tables)
+    view, _ = _cluster_view_actions(cfg, tables, 0, 4)
+    view = dataclasses.replace(
+        view, queue=np.full(cfg.cluster.n_servers, 500.0, np.float32))
+    terminal = np.stack([np.zeros(4, np.int32),
+                         np.full(4, tables.n_cuts - 1, np.int32),
+                         np.arange(4, dtype=np.int32)], -1)
+    br = pricing.price_actions(cfg, np_tables, view, terminal, xp=np)
+    assert not np.any(np.asarray(br.offloaded))
+    np.testing.assert_array_equal(np.asarray(br.queue_s), 0.0)
+    # the same cuts made non-terminal see the per-server queue
+    split = np.stack([np.zeros(4, np.int32), np.zeros(4, np.int32),
+                      np.arange(4, dtype=np.int32)], -1)
+    br2 = pricing.price_actions(cfg, np_tables, view, split, xp=np)
+    assert np.all(np.asarray(br2.queue_s)[np.asarray(br2.offloaded)] > 0)
+
+
+def test_pricing_server_axis_reprices_link_per_target():
+    """Identical (version, cut) to a far server pays the degraded link
+    and its RTT: tx_s strictly above the near server's."""
+    cfg, tables = _cluster_env(pool="hetero-4", topology="near-far")
+    np_tables = pricing.numpy_tables(tables)
+    view, _ = _cluster_view_actions(cfg, tables, 1, 4)
+    near = np.asarray(cfg.cluster.link_scale).argmax(axis=1)
+    far = np.asarray(cfg.cluster.link_scale).argmin(axis=1)
+    a_near = np.stack([np.zeros(4, np.int32), np.zeros(4, np.int32),
+                       near.astype(np.int32)], -1)
+    a_far = np.stack([np.zeros(4, np.int32), np.zeros(4, np.int32),
+                      far.astype(np.int32)], -1)
+    tx_near = np.asarray(pricing.price_actions(
+        cfg, np_tables, view, a_near, xp=np).tx_s)
+    tx_far = np.asarray(pricing.price_actions(
+        cfg, np_tables, view, a_far, xp=np).tx_s)
+    assert np.all(tx_far > tx_near)
+
+
+# --------------------------------------------------------------------------
+# env + controller: the widened action space
+# --------------------------------------------------------------------------
+
+def test_env_widens_obs_and_action_space():
+    cfg, tables = _cluster_env()
+    S = cfg.cluster.n_servers
+    assert cfg.n_servers == S and cfg.action_dim == 3
+    assert cfg.obs_dim_per_uav == len(OBS_FEATURES) + S - 1
+    state = env_reset(cfg, tables, jax.random.key(0))
+    assert state["queue"].shape == (S,)
+    obs_flat = observe(cfg, tables, state)
+    assert obs_flat.shape == (cfg.n_uavs, cfg.obs_dim_per_uav)
+
+
+def test_agent_learns_server_head_and_samples_triples():
+    cfg, tables = _cluster_env()
+    params = init_agent(cfg, tables, A2CConfig(), jax.random.key(0))
+    assert "srv" in params["actor"]
+    state = env_reset(cfg, tables, jax.random.key(1))
+    obs_flat = observe(cfg, tables, state).reshape(-1)
+    valid = tables.version_valid[state["model_id"]]
+    acts = sample_actions(params, obs_flat, valid, jax.random.key(2))
+    assert acts.shape == (cfg.n_uavs, 3)
+    assert np.all(np.asarray(acts[:, 2]) >= 0)
+    assert np.all(np.asarray(acts[:, 2]) < cfg.n_servers)
+    greedy = greedy_actions(params, obs_flat, valid)
+    assert greedy.shape == (cfg.n_uavs, 3)
+    # env consumes the widened actions
+    _, reward, _ = env_step(cfg, tables, state, acts, jax.random.key(3))
+    assert np.isfinite(float(reward.mean()))
+
+
+def test_routers_route_where_their_rule_says():
+    cfg, tables = _cluster_env(devices=8)
+    S = cfg.cluster.n_servers
+    state = env_reset(cfg, tables, jax.random.key(0))
+    rng = jax.random.key(9)
+    rr = get_policy_spec("round_robin").build(cfg, tables)
+    acts = np.asarray(rr.act(state, rng))
+    t = int(np.asarray(state["t"]))
+    np.testing.assert_array_equal(acts[:, 2], (np.arange(8) + t) % S)
+
+    deep = dict(state)
+    deep["queue"] = jnp.asarray([9.0, 1.0, 5.0, 7.0])
+    jsq = get_policy_spec("join_shortest_queue").build(cfg, tables)
+    np.testing.assert_array_equal(np.asarray(jsq.act(deep, rng))[:, 2], 1)
+
+    lo = get_policy_spec("local_only").build(cfg, tables)
+    lacts = np.asarray(lo.act(state, rng))
+    np.testing.assert_array_equal(lacts[:, 1], tables.n_cuts - 1)
+    assert not np.any(np.asarray(pricing.price_actions(
+        cfg, pricing.numpy_tables(tables),
+        pricing.view_from_state(state), lacts, xp=np).offloaded))
+
+
+# --------------------------------------------------------------------------
+# scenarios: presets + builders
+# --------------------------------------------------------------------------
+
+def test_cluster_presets_registered_and_build():
+    from repro.scenarios import get_scenario
+    for name in ("edge-cluster", "cluster-brownout"):
+        sc = get_scenario(name)
+        cluster = sc.build_cluster()
+        assert cluster.n_servers == 4
+        assert cluster.n_devices == sc.devices
+        assert sc.build_autoscaler() is not None
+
+
+def test_autoscale_without_pool_rejected():
+    from repro.scenarios import get_scenario
+    sc = get_scenario("edge-cluster").replace(pool=None)
+    with pytest.raises(ValueError, match="without a server pool"):
+        sc.build_autoscaler()
+
+
+def test_tpu_env_rejects_pool():
+    from repro.scenarios import get_scenario
+    sc = get_scenario("tpu-submesh").replace(pool="hetero-4")
+    with pytest.raises(ValueError, match="single shared server"):
+        sc.build_env()
