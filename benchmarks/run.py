@@ -34,6 +34,8 @@ System benches:
   pricing_numpy_throughput — numpy pricing-core actions/s (fleet hot path)
   online_adaptation     — repro.online incremental-update steps/s +
                           link-brownout drift recovery time
+  timeline_overhead     — flight-recorder capture cost: fleet_sim wall
+                          with FleetConfig.timeline on vs off (gated)
   kernels_interpret     — Pallas flash-attention kernel (interpret mode)
 """
 from __future__ import annotations
@@ -468,6 +470,42 @@ def fleet_sim(n_requests=100_000, n_uavs=8, reps=3):
         devices_per_s=n_uavs * res.epochs / dt)
 
 
+def timeline_overhead(n_requests=100_000, n_uavs=8, reps=3):
+    """Flight-recorder capture cost on the fleet_sim smoke world: wall
+    ratio of ``FleetConfig.timeline`` on vs off, paired per rep (same
+    seed → identical epochs). The gated value is the on/off ratio —
+    capture-cost regressions show up as the increase; the acceptance
+    bar is < 1.05 (under 5% added wall). The recorded trace's
+    ``fleet.timeline`` span is the same cost seen as a phase."""
+    from repro.core import make_paper_env
+    from repro.policies import build_policy
+    from repro.sim import FleetConfig, PoissonTrace, simulate
+    cfg, tables = make_paper_env(n_uavs=n_uavs, slot_seconds=10.0)
+    trace = PoissonTrace(rate_rps=15.0)
+    pol = build_policy("greedy_oracle", cfg, tables)
+
+    def one(timeline):
+        kw = dict(n_requests=n_requests, seed=0,
+                  fleet=FleetConfig(slo_s=1.0, timeline=timeline))
+        t0 = time.perf_counter()
+        res = simulate(cfg, tables, pol, trace, **kw)
+        return time.perf_counter() - t0, res
+
+    one(False), one(True)                      # warm (policy jit)
+    ratios = []
+    for _ in range(reps):
+        off_s, _ = one(False)
+        on_s, res = one(True)
+        ratios.append(on_s / off_s)
+    tl = res.timeline
+    row("timeline_overhead", Timing(min(ratios), ratios),
+        f"on_over_off_wall,overhead_pct={(min(ratios)-1)*100:.2f} "
+        f"epochs={res.epochs} rows={len(tl)} "
+        f"slo_attainment={tl.slo_report.attainment:.3f} "
+        f"alerts={len(tl.slo_report.alerts)}",
+        overhead_pct=(min(ratios) - 1) * 100)
+
+
 def _megafleet_world(n_uavs):
     """One mega-fleet bench world: paper env provisioned per device,
     1 s slots, Poisson 5 rps/device, static oracle policy."""
@@ -740,6 +778,7 @@ def build_matrix() -> Matrix:
     m.add(megafleet_speedup, tags=("system", "smoke"))
     m.add(scenario_sweep, tags=("system",))
     m.add(cluster_routing, tags=("system", "smoke"))
+    m.add(timeline_overhead, tags=("system", "smoke"))
     m.add(train_throughput, tags=("system", "smoke"))
     m.add(pricing_numpy_throughput, tags=("system", "smoke"))
     m.add(online_adaptation, tags=("system",))

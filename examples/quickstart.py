@@ -35,7 +35,8 @@ def main():
 
     print("\npolicy comparison (2 eval episodes each):")
     statics = [n for n in policy_names()
-               if not get_policy_spec(n).trainable]
+               if not get_policy_spec(n).trainable
+               and not get_policy_spec(n).needs_cluster]
     for name in statics + ["a2c"]:
         pol = a2c if name == "a2c" else build_policy(name, cfg, tables)
         m = evaluate_policy(cfg, tables, pol, jax.random.key(1), episodes=2)

@@ -72,7 +72,7 @@ DEFAULTS = dict(
     replay_file=None, models="cycle",
     w_acc=0.05, w_lat=0.10, w_energy=0.15, w_stab=0.70,
     env="paper", arch="qwen2-0.5b", execute=False, sample=16, exec_seq=32,
-    json=None, quiet=False, verbose=0, trace_out=None,
+    json=None, quiet=False, verbose=0, trace_out=None, timeline_out=None,
 )
 
 # which CLI rate flags feed which trace constructor kwargs
@@ -173,6 +173,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="record structured obs events (spans, metrics, "
                     "JAX retrace accounting) to a JSONL file; summarize "
                     "with scripts/obsview.py")
+    ap.add_argument("--timeline-out", metavar="PATH",
+                    help="record the per-epoch fleet flight recorder "
+                    "(repro.obs.timeline: fleet/server series, drift + "
+                    "autoscale annotations, SLO error budgets) and write "
+                    "it here ('-' = stdout); render with "
+                    "scripts/fleetview.py")
     return ap
 
 
@@ -364,31 +370,55 @@ def main():
         meta={"tool": "simulate", "scenario": sc.name,
               "policies": list(names), "seeds": list(sc.seeds)}) \
         if merged["trace_out"] else contextlib.nullcontext()
-    with rec_ctx:
-        report = run_scenario(sc, names, save_policies=save_map,
-                              load_policies=load_map, verbose=True)
+    # `--timeline-out -` streams the flight-recorder JSON on stdout for
+    # piping into fleetview; divert the human-facing report to stderr so
+    # stdout stays pure JSON.
+    human_ctx = contextlib.redirect_stdout(sys.stderr) \
+        if merged["timeline_out"] == "-" else contextlib.nullcontext()
+    with human_ctx:
+        with rec_ctx:
+            report = run_scenario(sc, names, save_policies=save_map,
+                                  load_policies=load_map, verbose=True,
+                                  timeline=bool(merged["timeline_out"]))
 
-    cross = next((r.cross_check for r in report.results.values()
-                  if r.cross_check), None)
-    if cross:
-        obs.info(
-            f"\nexecute cross-check: {cross['samples']} requests through "
-            f"SplitServingEngine; act-bytes exact={cross['bytes_exact']} "
-            f"({cross['bytes_mismatches']} mismatches); wall/analytical "
-            f"latency ratio median={cross['latency_ratio_median']:.2f} "
-            f"max={cross['latency_ratio_max']:.2f} "
-            f"(tolerance {cross['latency_tolerance']}x, within="
-            f"{cross['latency_within_tolerance']})")
-    if merged["json"]:
-        out = report.to_json()
-        out["config"] = {k: v for k, v in merged.items()
-                         if k not in ("json", "list_scenarios")}
-        with open(merged["json"], "w") as f:
-            json.dump(out, f, indent=2, default=str)
-        obs.info(f"\nwrote {merged['json']}")
-    if merged["trace_out"]:
-        obs.info(f"wrote obs trace {merged['trace_out']}; summarize with: "
-                 f"python scripts/obsview.py {merged['trace_out']}")
+        cross = next((r.cross_check for r in report.results.values()
+                      if r.cross_check), None)
+        if cross:
+            obs.info(
+                f"\nexecute cross-check: {cross['samples']} requests "
+                f"through SplitServingEngine; act-bytes "
+                f"exact={cross['bytes_exact']} "
+                f"({cross['bytes_mismatches']} mismatches); "
+                f"wall/analytical latency ratio "
+                f"median={cross['latency_ratio_median']:.2f} "
+                f"max={cross['latency_ratio_max']:.2f} "
+                f"(tolerance {cross['latency_tolerance']}x, within="
+                f"{cross['latency_within_tolerance']})")
+        if merged["json"]:
+            out = report.to_json()
+            out["config"] = {k: v for k, v in merged.items()
+                             if k not in ("json", "list_scenarios")}
+            with open(merged["json"], "w") as f:
+                json.dump(out, f, indent=2, default=str)
+            obs.info(f"\nwrote {merged['json']}")
+        if merged["trace_out"]:
+            obs.info(f"wrote obs trace {merged['trace_out']}; summarize "
+                     f"with: python scripts/obsview.py "
+                     f"{merged['trace_out']}")
+
+    if merged["timeline_out"]:
+        from repro.obs.timeline import write_timeline
+        runs = [{"policy": name, "seed": int(seed), "timeline": tl}
+                for name, r in report.results.items()
+                for seed, tl in zip(sc.seeds, r.timelines)
+                if tl is not None]
+        write_timeline(merged["timeline_out"], runs,
+                       meta={"tool": "simulate", "scenario": sc.name,
+                             "slo_target": sc.slo_target})
+        if merged["timeline_out"] != "-":
+            obs.info(f"wrote timeline {merged['timeline_out']}; render "
+                     f"with: python scripts/fleetview.py "
+                     f"{merged['timeline_out']}")
 
 
 if __name__ == "__main__":

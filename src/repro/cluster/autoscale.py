@@ -23,6 +23,7 @@ stay bit-reproducible and paired seeds stay paired.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, List
 
 import numpy as np
 
@@ -55,13 +56,14 @@ class Autoscaler:
         self._down_streak = np.zeros(n_servers, dtype=np.int64)
         self._hold = np.zeros(n_servers, dtype=np.int64)
 
-    def step(self, pool, queue_jobs: np.ndarray) -> int:
+    def step(self, pool, queue_jobs: np.ndarray) -> List[Dict]:
         """Advance one epoch on measured queue depth; mutates the pool's
-        ``replicas``/``dvfs_idx`` in place and returns how many servers
-        moved this epoch."""
+        ``replicas``/``dvfs_idx`` in place and returns one decision dict
+        per server that moved — the action taken plus the measured depth
+        that triggered it (the timeline's ``autoscale`` annotations)."""
         cfg = self.cfg
         c = pool.cluster
-        moved = 0
+        decisions: List[Dict] = []
         over = queue_jobs > cfg.up_queue
         under = queue_jobs < cfg.down_queue
         self._up_streak = np.where(over, self._up_streak + 1, 0)
@@ -78,21 +80,26 @@ class Autoscaler:
             if go_up:
                 if pool.dvfs_idx[s] < len(c.dvfs[s]) - 1:
                     pool.dvfs_idx[s] += 1
+                    action = "dvfs_up"
                 elif pool.replicas[s] < c.max_replicas[s]:
                     pool.replicas[s] += 1
+                    action = "replica_up"
                 else:
                     continue          # already at full capacity
             elif go_down:
                 if pool.replicas[s] > 1:
                     pool.replicas[s] -= 1
+                    action = "replica_down"
                 elif pool.dvfs_idx[s] > 0:
                     pool.dvfs_idx[s] -= 1
+                    action = "dvfs_down"
                 else:
                     continue          # already at the floor
             else:
                 continue
-            moved += 1
+            decisions.append({"server": s, "action": action,
+                              "queue": float(queue_jobs[s])})
             self._hold[s] = cfg.cooldown if cfg.policy == "hysteresis" \
                 else 0
             self._up_streak[s] = self._down_streak[s] = 0
-        return moved
+        return decisions

@@ -144,6 +144,14 @@ class ServerPool:
         self.scale_events = 0
         self._replica_slots = 0.0   # sum over epochs of active replicas
         self._epochs = 0
+        # last tick's snapshot — the state the epoch actually ran at
+        # (taken *before* the autoscaler moves) plus its decisions; the
+        # timeline's per-server series read these
+        self.last_dvfs = np.asarray([cluster.dvfs[s][self.dvfs_idx[s]]
+                                     for s in range(S)])
+        self.last_replicas = self.replicas.copy()
+        self.last_power_w = np.zeros(S)
+        self.last_decisions: list = []
         self.autoscaler = None
         if autoscaler is not None:
             from repro.cluster.autoscale import Autoscaler
@@ -174,9 +182,14 @@ class ServerPool:
         self.energy_j += float(p.sum()) * slot_seconds
         self._replica_slots += float(self.replicas.sum())
         self._epochs += 1
+        self.last_dvfs = d
+        self.last_replicas = self.replicas.copy()
+        self.last_power_w = p
+        self.last_decisions = []
         if self.autoscaler is not None:
-            moved = self.autoscaler.step(self, np.asarray(queue_jobs))
-            self.scale_events += moved
+            self.last_decisions = self.autoscaler.step(
+                self, np.asarray(queue_jobs))
+            self.scale_events += len(self.last_decisions)
 
     def summary(self) -> Dict[str, float]:
         return {

@@ -92,7 +92,8 @@ def _router(name: str, fn, description: str) -> PolicySpec:
         return StaticPolicy(env_cfg, tables, fn)
 
     return register(PolicySpec(name=name, factory=factory,
-                               trainable=False, description=description))
+                               trainable=False, description=description,
+                               needs_cluster=True))
 
 
 _router("round_robin", round_robin,

@@ -29,6 +29,7 @@ from repro.core.actor_critic import (actor_apply, critic_apply,  # noqa: F401
                                      logp_entropy, plan_agent,
                                      sample_actions)
 from repro.core.env import EnvConfig, ProfileTables
+from repro.obs import jaxmon, traindiag
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -85,10 +86,18 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
         loss = (actor_loss + ac.value_coef * critic_loss
                 - ac.entropy_coef * jnp.mean(ent))
         return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss,
-                      "entropy": jnp.mean(ent) / n}
+                      "entropy": jnp.mean(ent) / n,
+                      # learner-health panel (repro.obs.traindiag):
+                      # pre-normalization advantage stats, critic fit,
+                      # and the old-policy logp for post-update KL
+                      "adv_mean": jnp.mean(adv), "adv_std": jnp.std(adv),
+                      "explained_var": traindiag.explained_variance(
+                          rets, values),
+                      "logp_old": lp}
 
     @jax.jit
     def train_episode(params, opt_state, rng, task_seq=None):
+        jaxmon.count_trace("train.a2c")
         task_seq = net.prepare_task_seq(task_seq, E)
         _, traj, bootstrap = net.run_batched_episodes(
             env_cfg, tables, rollout, params, rng, E,
@@ -97,12 +106,21 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
             traj["reward"], bootstrap, ac.gamma)
         (loss, stats), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, traj, rets)
+        lp_old = stats.pop("logp_old")
         params, opt_state, om = adamw_update(opt, params, grads, opt_state)
+        # approx-KL needs the *updated* policy's logp on the same batch:
+        # one extra evaluation pass, same shapes, no new trace
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), traj)
+        lp_new, _ = jax.vmap(
+            lambda o, a, v: logp_entropy(params, o, a, v))(
+                flat["obs"], flat["actions"], flat["valid"])
         stats = dict(stats, loss=loss,
                      episode_reward=jnp.mean(jnp.sum(traj["reward"], -1)),
                      mean_reward=jnp.mean(traj["reward"]),
                      final_battery=jnp.mean(traj["battery"][:, -1]),
-                     grad_norm=om["grad_norm"])
+                     grad_norm=om["grad_norm"],
+                     approx_kl=traindiag.approx_kl(
+                         lp_old, lp_new.reshape(lp_old.shape)) / n)
         return params, opt_state, stats
 
     return train_episode

@@ -19,6 +19,7 @@ from repro.core import actor_critic as net
 from repro.core.a2c import A2CConfig
 from repro.core.actor_critic import critic_apply, init_agent, logp_entropy
 from repro.core.env import EnvConfig, ProfileTables
+from repro.obs import jaxmon, traindiag
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -42,6 +43,7 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
                       total_steps=pc.episodes * pc.epochs, grad_clip=1.0,
                       min_lr_ratio=1.0)
     E = max(int(pc.batch_envs), 1)
+    n = env_cfg.n_uavs
     rollout = net.make_rollout(env_cfg, tables, record_policy=True)
 
     def loss_fn(params, traj, advs, rets):
@@ -61,10 +63,21 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
         critic_loss = 0.5 * jnp.mean(jnp.square(rets - values))
         loss = (actor_loss + pc.value_coef * critic_loss
                 - pc.entropy_coef * jnp.mean(ent))
-        return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss}
+        return loss, {"actor_loss": actor_loss, "critic_loss": critic_loss,
+                      # learner-health panel (repro.obs.traindiag):
+                      # KL is measured against the *behavior* policy the
+                      # rollout recorded, per device like entropy
+                      "entropy": jnp.mean(ent) / n,
+                      "approx_kl": traindiag.approx_kl(traj["logp"],
+                                                       lp) / n,
+                      "adv_mean": jnp.mean(advs),
+                      "adv_std": jnp.std(advs),
+                      "explained_var": traindiag.explained_variance(
+                          rets, values)}
 
     @jax.jit
     def train_episode(params, opt_state, rng, task_seq=None):
+        jaxmon.count_trace("train.ppo")
         task_seq = net.prepare_task_seq(task_seq, E)
         _, traj, bootstrap = net.run_batched_episodes(
             env_cfg, tables, rollout, params, rng, E,
@@ -80,13 +93,18 @@ def make_train_episode(env_cfg: EnvConfig, tables: ProfileTables,
             params, opt_state = carry
             (loss, stats), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, flat, advs, rets)
-            params, opt_state, _ = adamw_update(opt, params, grads, opt_state)
-            return (params, opt_state), loss
-        (params, opt_state), losses = jax.lax.scan(
+            params, opt_state, om = adamw_update(opt, params, grads,
+                                                 opt_state)
+            return (params, opt_state), dict(
+                stats, loss=loss, grad_norm=om["grad_norm"])
+        (params, opt_state), per_epoch = jax.lax.scan(
             epoch, (params, opt_state), None, length=pc.epochs)
-        return params, opt_state, {
-            "loss": losses[-1], "mean_reward": jnp.mean(traj["reward"]),
-            "episode_reward": jnp.mean(jnp.sum(traj["reward"], -1))}
+        # report the final surrogate epoch: the policy/critic actually
+        # carried forward (KL there measures total drift this update)
+        last = jax.tree.map(lambda x: x[-1], per_epoch)
+        return params, opt_state, dict(
+            last, mean_reward=jnp.mean(traj["reward"]),
+            episode_reward=jnp.mean(jnp.sum(traj["reward"], -1)))
 
     return train_episode
 

@@ -31,4 +31,20 @@ __all__ = [
     "inc", "gauge", "observe",
     "log", "info", "debug", "warn", "set_verbosity", "get_verbosity",
     "jaxmon", "report",
+    # flight recorder (lazy imports below: timeline/slo/traindiag pull
+    # numpy/jnp machinery the bare tracing hooks don't need)
+    "Timeline", "SLOConfig", "TrainDiag",
 ]
+
+
+def __getattr__(name):
+    if name in ("Timeline", "write_timeline", "read_timeline"):
+        from repro.obs import timeline
+        return getattr(timeline, name)
+    if name in ("SLOConfig", "SLOReport"):
+        from repro.obs import slo
+        return getattr(slo, name)
+    if name in ("TrainDiag",):
+        from repro.obs import traindiag
+        return getattr(traindiag, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

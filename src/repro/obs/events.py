@@ -146,7 +146,8 @@ class Recorder:
     enabled = True
 
     def __init__(self, path: Optional[str] = None,
-                 meta: Optional[Dict] = None, clock=time.perf_counter):
+                 meta: Optional[Dict] = None, clock=time.perf_counter,
+                 flush_every: Optional[int] = None):
         from repro.obs.metrics import Metrics
 
         self.path = path
@@ -158,6 +159,13 @@ class Recorder:
         self._stack: List[str] = []
         self._seq = 0
         self._closed = False
+        # opt-in incremental flushing: every N events the tail is
+        # appended to the file, so a killed long run loses at most the
+        # last N events (read back with the truncation-tolerant
+        # read_events). Default None keeps the single write at close().
+        self._flush_every = int(flush_every) if flush_every else None
+        self._written = 0          # events already flushed to the file
+        self._fh = None
         # jax compile accounting: snapshot the process counters now,
         # emit the delta as one "jax" summary event at close
         self._jax0: Optional[Dict] = None
@@ -172,6 +180,23 @@ class Recorder:
         ev["seq"] = self._seq
         self._seq += 1
         self.events.append(ev)
+        if self._flush_every and self.path and \
+                len(self.events) - self._written >= self._flush_every:
+            self._flush()
+
+    def _flush(self):
+        """Append the unwritten event tail to the file (opens it — and
+        writes the meta header — on first use)."""
+        if self._fh is None:
+            self._fh = open(self.path, "w")
+            self._fh.write(json.dumps(
+                {"type": "meta", "schema": SCHEMA_VERSION,
+                 "clock": "perf_counter", "meta": self.meta},
+                default=_json_default) + "\n")
+        for ev in self.events[self._written:]:
+            self._fh.write(json.dumps(ev, default=_json_default) + "\n")
+        self._written = len(self.events)
+        self._fh.flush()
 
     def span(self, name: str, /, **attrs) -> _Span:
         return _Span(self, name, attrs)
@@ -208,7 +233,11 @@ class Recorder:
                      for k in now if now[k] != self._jax0.get(k, 0)}
             self._emit({"type": "jax", "t": t, "compile": delta,
                         "traces": jaxmon.trace_counts()})
-        if self.path:
+        if self._fh is not None:
+            self._flush()
+            self._fh.close()
+            self._fh = None
+        elif self.path:
             with open(self.path, "w") as f:
                 f.write(json.dumps(
                     {"type": "meta", "schema": SCHEMA_VERSION,
@@ -247,11 +276,12 @@ def event(name: str, /, **attrs) -> None:
 
 
 @contextmanager
-def recording(path: Optional[str] = None, meta: Optional[Dict] = None):
+def recording(path: Optional[str] = None, meta: Optional[Dict] = None,
+              flush_every: Optional[int] = None):
     """Install a fresh Recorder for the block; restore the previous one
     and close (flush/write) on exit. Yields the recorder."""
     prev = _RECORDER
-    rec = Recorder(path=path, meta=meta)
+    rec = Recorder(path=path, meta=meta, flush_every=flush_every)
     set_recorder(rec)
     try:
         yield rec
@@ -262,9 +292,19 @@ def recording(path: Optional[str] = None, meta: Optional[Dict] = None):
 
 def read_events(path: str) -> Tuple[Dict, List[Dict]]:
     """Load a JSONL event file -> (meta, events). Fails loudly on a
-    missing/mismatched schema version."""
+    missing/mismatched schema version. A truncated *final* line — a run
+    killed mid-write under ``flush_every`` — is skipped silently;
+    corruption anywhere else still raises."""
     with open(path) as f:
-        lines = [json.loads(s) for s in f if s.strip()]
+        raw = [s for s in f if s.strip()]
+    lines = []
+    for i, s in enumerate(raw):
+        try:
+            lines.append(json.loads(s))
+        except json.JSONDecodeError:
+            if i == len(raw) - 1:
+                break               # torn tail from a killed run
+            raise ValueError(f"{path}: corrupt JSONL at line {i + 1}")
     if not lines or lines[0].get("type") != "meta":
         raise ValueError(f"{path}: not an obs event file (no meta header)")
     meta = lines[0]

@@ -15,8 +15,11 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-# event names folded into the drift/adaptation timeline
-_TIMELINE_PREFIXES = ("drift.", "online.")
+# event names folded into the drift/adaptation timeline: drift regime
+# machinery, online adaptation, autoscaler decisions, SLO error-budget
+# alerts, and timeline bookkeeping events
+_TIMELINE_PREFIXES = ("drift.", "online.", "autoscale.", "slo.",
+                      "timeline.")
 
 
 def fold(events: List[Dict], meta: Optional[Dict] = None) -> Dict:

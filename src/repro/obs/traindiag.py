@@ -1,0 +1,157 @@
+"""repro.obs.traindiag — per-update learner health for A2C/PPO.
+
+The training loops already jit one update per episode batch; this module
+adds the standard RL health panel *inside* that jitted update — entropy,
+approximate KL, gradient global-norm, explained variance of the value
+function, and the advantage distribution — carried out as auxiliary
+outputs of the existing ``train_episode`` functions. Nothing here runs
+host code on a traced path and nothing changes the update itself: the
+diagnostics are pure functions of tensors the update already computes
+(plus, for A2C's approx-KL, one extra post-update policy evaluation),
+so the PR 6 zero-retrace regression guarantee extends to them
+(``jaxmon.count_trace`` sites in a2c/ppo assert exactly one trace per
+shape signature).
+
+Reading the panel:
+
+- **entropy** (per device) — falling too fast means premature collapse
+  onto one (version, cut-point) arm; flat at the max means the policy
+  never left uniform.
+- **approx_kl** — mean(logp_old - logp_new) over the update's batch,
+  the cheap KL estimate from the PPO literature. Spikes flag
+  destructively large steps (A2C) or clipping that has stopped binding
+  (PPO).
+- **grad_norm** — global norm *before* clipping, from the AdamW
+  telemetry; pinned at the clip threshold means the trust region is
+  the clip, not the loss surface.
+- **explained_var** — 1 - Var[R - V]/Var[R]; 0 means the critic is a
+  constant, 1 a perfect fit, negative worse than predicting the mean.
+- **adv_mean/adv_std** — the advantage distribution the actor actually
+  trains on (pre-normalization); a collapsing std starves the policy
+  gradient of signal.
+
+``TrainDiag`` is the host-side columnar view (``EpochLog`` discipline)
+built from a training ``history`` list; ``fleetview.py`` renders it as
+the learner panel of the flight-recorder dashboard.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# the per-update series a diagnosed history carries (superset of the
+# base stats; missing keys render as absent, not as errors)
+DIAG_KEYS = ("entropy", "approx_kl", "grad_norm", "explained_var",
+             "adv_mean", "adv_std")
+
+
+# --------------------------------------------------------------------------
+# in-jit helpers (pure jnp; called from inside train_episode)
+# --------------------------------------------------------------------------
+
+def explained_variance(returns, values):
+    """1 - Var[R - V] / Var[R], the standard critic-fit score; defined
+    as 0 when the return batch is constant (Var[R] = 0)."""
+    var_r = jnp.var(returns)
+    return jnp.where(var_r > 0.0,
+                     1.0 - jnp.var(returns - values) / (var_r + 1e-12),
+                     0.0)
+
+
+def approx_kl(logp_old, logp_new):
+    """mean(logp_old - logp_new): the first-order KL(old || new)
+    estimator — cheap, unbiased in expectation, computed on tensors the
+    update already holds."""
+    return jnp.mean(logp_old - logp_new)
+
+
+# --------------------------------------------------------------------------
+# host-side accumulator / report
+# --------------------------------------------------------------------------
+
+class TrainDiag:
+    """Columnar per-update diagnostics view over a training history.
+
+    ``history`` is the list of float dicts ``a2c.train``/``ppo.train``
+    return (one per update). Columns are typed numpy arrays; keys a run
+    didn't record are simply absent.
+    """
+
+    def __init__(self, columns: Dict[str, np.ndarray]):
+        self._cols = dict(columns)
+
+    @classmethod
+    def from_history(cls, history: List[Dict]) -> "TrainDiag":
+        if not history:
+            return cls({})
+        keys = [k for k in history[0] if isinstance(history[0][k],
+                                                    (int, float))]
+        return cls({k: np.asarray([h.get(k, np.nan) for h in history],
+                                  np.float64) for k in keys})
+
+    @property
+    def updates(self) -> int:
+        return len(next(iter(self._cols.values()))) if self._cols else 0
+
+    @property
+    def keys(self) -> List[str]:
+        return [k for k in DIAG_KEYS if k in self._cols]
+
+    def column(self, key: str) -> np.ndarray:
+        return self._cols[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._cols
+
+    def summary(self) -> Dict:
+        """First/last/min/max per diagnostic — the scalar slice for
+        reports and smoke assertions."""
+        out: Dict = {"updates": self.updates}
+        for k in self.keys:
+            c = self._cols[k]
+            ok = c[~np.isnan(c)]
+            if ok.size == 0:
+                continue
+            out[k] = {"first": float(ok[0]), "last": float(ok[-1]),
+                      "min": float(ok.min()), "max": float(ok.max())}
+        return out
+
+    def to_json(self) -> Dict:
+        return {"updates": self.updates,
+                "series": {k: [None if np.isnan(v) else round(float(v), 6)
+                               for v in self._cols[k]]
+                           for k in self.keys},
+                "summary": self.summary()}
+
+
+def check_health(diag: "TrainDiag", *,
+                 kl_limit: float = 1.0,
+                 entropy_floor: float = 1e-4) -> List[str]:
+    """Cheap post-hoc lints over a finished run: returns human-readable
+    warnings (empty = clean). Advisory only — nothing gates on these."""
+    warnings: List[str] = []
+    if "approx_kl" in diag:
+        kl = diag.column("approx_kl")
+        bad = np.abs(kl[~np.isnan(kl)])
+        if bad.size and bad.max() > kl_limit:
+            warnings.append(
+                f"approx_kl peaked at {bad.max():.3f} (> {kl_limit}): "
+                "destructively large policy steps")
+    if "entropy" in diag:
+        ent = diag.column("entropy")
+        ok = ent[~np.isnan(ent)]
+        if ok.size and ok[-1] < entropy_floor:
+            warnings.append(
+                f"final entropy {ok[-1]:.2e} < {entropy_floor}: policy "
+                "collapsed to a deterministic arm")
+    if "explained_var" in diag:
+        ev = diag.column("explained_var")
+        ok = ev[~np.isnan(ev)]
+        if ok.size and ok[-1] < 0.0:
+            warnings.append(
+                f"final explained variance {ok[-1]:+.3f} < 0: the critic "
+                "predicts worse than the return mean")
+    return warnings

@@ -92,6 +92,7 @@ class PolicySpec:
     factory: Callable[..., Policy]
     trainable: bool = False
     description: str = ""
+    needs_cluster: bool = False  # only buildable when EnvConfig.cluster set
 
     def build(self, env_cfg, tables, **kw) -> Policy:
         policy = self.factory(env_cfg, tables, **kw)

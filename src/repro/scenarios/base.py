@@ -78,6 +78,10 @@ class Scenario:
 
     # --- evaluation -------------------------------------------------------
     slo_s: float = 2.0
+    # SLO attainment objective for the error-budget report
+    # (repro.obs.slo): at most (1 - slo_target) of offered requests may
+    # miss the slo_s deadline or drop before the budget is spent
+    slo_target: float = 0.95
     seeds: Tuple[int, ...] = (0, 1, 2)   # paired across policies
     n_requests: int = 20_000
     policies: Tuple[str, ...] = ("a2c", "device_only", "full_offload")

@@ -70,6 +70,15 @@ class FleetConfig:
     # epoch row, stop after cap rows (None = unbounded)
     log_stride: int = 1
     log_cap: Optional[int] = None
+    # flight recorder (repro.obs.timeline): capture per-epoch fleet
+    # aggregates, per-server series and annotation events into
+    # SimResult.timeline. Off by default; capture only *reads* state, so
+    # results stay bit-identical on vs off (tested on every engine).
+    # Rows follow log_stride.
+    timeline: bool = False
+    # SLO attainment objective the error-budget report (repro.obs.slo)
+    # burns against; scenarios override it per preset
+    slo_target: float = 0.95
     # scan engine only: shard the device axis over every visible jax
     # device via shard_map (per-epoch psum reductions)
     shard: bool = False
@@ -92,6 +101,9 @@ class SimResult:
     adaptation: Optional[Dict] = None
     # cluster runs only: (S,) requests routed to each server
     server_hist: Optional[np.ndarray] = None
+    # flight recorder (FleetConfig.timeline=True): repro.obs.timeline
+    # Timeline with per-epoch series, annotations and the SLO report
+    timeline: object = None
 
     @property
     def modal_selection(self):
@@ -296,6 +308,15 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
 
     stream = trace.stream(t_rng, n, cfg.slot_seconds)
     metrics = FleetMetrics(slo_s=fleet.slo_s)
+    tl = None
+    if fleet.timeline:
+        from repro.obs.timeline import Timeline
+        tl = Timeline(slo_s=fleet.slo_s, slot_seconds=cfg.slot_seconds,
+                      stride=fleet.log_stride,
+                      n_servers=0 if cluster is None else cluster.n_servers,
+                      server_names=None if cluster is None
+                      else list(cluster.names),
+                      engine=fleet.engine)
     hist = np.zeros((tables.n_models, tables.n_versions, tables.n_cuts),
                     dtype=np.int64)
     epoch_log = EpochLog(stride=fleet.log_stride, cap=fleet.log_cap)
@@ -314,6 +335,9 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                 regime_idx, reg = r, regimes[r]
                 obs.event("drift.regime_switch", epoch=epoch,
                           regime=regime_idx, name=reg.name)
+                if tl is not None:
+                    tl.annotate(epoch, "regime_switch",
+                                regime=regime_idx, name=reg.name)
                 phys = reg.env_cfg
                 lp, pw = phys.latency, phys.power
                 phys_backend = backend if phys is cfg \
@@ -388,6 +412,7 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
             routed = actions[:, 2]
             tail_in_s = np.array([contrib[routed == s].sum()
                                   for s in range(cluster.n_servers)])
+        mark = metrics.mark() if tl is not None else None
         with obs.span("fleet.queues", engine=fleet.engine):
             if fleet.engine == "vectorized":
                 slo_hits = megafleet.numpy_queues(
@@ -432,9 +457,22 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                            reg.name if reg is not None else "base",
                            r_epoch, oracle_r)
             if learner is not None:
+                on0 = (learner.updates, learner.bursts,
+                       learner.monitor.triggers)
                 learner.observe_transition(state, actions, per, amask,
                                            regime_idx)
-                learner.step(epoch, r_epoch, oracle_reward=oracle_r)
+                swapped = learner.step(epoch, r_epoch,
+                                       oracle_reward=oracle_r)
+                if tl is not None:
+                    # counter deltas -> annotation events (the learner
+                    # already emitted the matching online.* obs events)
+                    if learner.monitor.triggers > on0[2]:
+                        tl.annotate(epoch, "drift_trigger")
+                    if learner.bursts > on0[1]:
+                        tl.annotate(epoch, "burst_start")
+                    if swapped:
+                        tl.annotate(epoch, "hotswap",
+                                    updates=learner.updates)
 
         # 4) world dynamics (mirrors env_step, on the world rng, under
         #    the current regime's latency/power bounds)
@@ -473,6 +511,10 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
                     backlog_s + tail_in_s
                     - cfg.slot_seconds * eff.cap_scale, 0.0)
                 pool.tick(queue_jobs, cfg.slot_seconds)
+                for dec in pool.last_decisions:
+                    obs.event("autoscale.decision", epoch=epoch, **dec)
+                    if tl is not None:
+                        tl.annotate(epoch, "autoscale", **dec)
             obs_rate = (1.0 - fleet.ewma) * obs_rate \
                 + fleet.ewma * counts / cfg.slot_seconds
 
@@ -485,6 +527,25 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
         obs.observe("fleet.queue_jobs",
                     queue_jobs if pool is None else float(queue_jobs.sum()),
                     policy=policy.name)
+        if tl is not None:
+            with obs.span("fleet.timeline"):
+                lat_e, en_e = metrics.since(mark)
+                tl.append_epoch(
+                    epoch=epoch, arrivals=int(counts.sum()),
+                    dropped=dropped, slo_hits=slo_hits,
+                    alive=int(alive.sum()), regime=regime_idx,
+                    queue_jobs=float(np.sum(queue_jobs)),
+                    backlog_s=float(np.sum(backlog_s)),
+                    lat=lat_e, energy_j=float(en_e.sum()),
+                    # per-server series: measured depth at decision time
+                    # + the DVFS/replica/power state this epoch ran at
+                    # (pool.tick snapshots before the autoscaler moves)
+                    srv_queue=None if pool is None else queue_jobs,
+                    srv_dvfs=None if pool is None else pool.last_dvfs,
+                    srv_replicas=None if pool is None
+                    else pool.last_replicas,
+                    srv_power_w=None if pool is None
+                    else pool.last_power_w)
         if fleet.record_epochs:
             epoch_log.append({
                 "epoch": epoch, "arrivals": int(counts.sum()),
@@ -508,6 +569,9 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
             if hasattr(policy, "set_explore"):
                 policy.set_explore(0.0)
 
+    if tl is not None:
+        from repro.obs.slo import SLOConfig
+        tl.finalize(SLOConfig(target=fleet.slo_target))
     summary = metrics.summary(duration_s=t_now)
     summary["epochs"] = epoch
     summary["requests"] = served
@@ -516,4 +580,5 @@ def simulate(env_cfg: EnvConfig, tables: ProfileTables, policy,
     return SimResult(summary=summary, metrics=metrics, selection_hist=hist,
                      epochs=epoch, served=served, duration_s=t_now,
                      cross_check=backend.cross_check(), epoch_log=epoch_log,
-                     adaptation=adaptation, server_hist=srv_hist)
+                     adaptation=adaptation, server_hist=srv_hist,
+                     timeline=tl)

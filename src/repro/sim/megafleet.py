@@ -352,8 +352,13 @@ def simulate_scan(env_cfg: EnvConfig, tables: ProfileTables, policy,
                "hist_sel": acc["hist_sel"] + hist_sel_t}
         carry = (battery, bw, p_tx, activity, side_q, backlog_s,
                  free_rel, obs_rate, key, acc)
+        # per-epoch stacked outputs: O(1) scalars only (the scan-carry
+        # rule — DESIGN §13). Always emitted, timeline on or off, so the
+        # compiled graph is identical either way; the timeline is pure
+        # host-side extraction below.
         ys = (queue_jobs, backlog_s, dropped_t, slo_hits,
-              g(jnp.sum(alive.astype(jnp.int32))))
+              g(jnp.sum(alive.astype(jnp.int32))),
+              count_t, lat_sum, lat_max, e_sum)
         return carry, ys
 
     def run(counts_all, epochs_all, mids, bat0, bwi, pti, shard_idx):
@@ -395,7 +400,7 @@ def simulate_scan(env_cfg: EnvConfig, tables: ProfileTables, policy,
                 mesh=mesh,
                 in_specs=(P(None, "d"), P(), P("d"), P("d"), P("d"),
                           P("d")),
-                out_specs=(P(), (P(), P(), P(), P(), P())),
+                out_specs=(P(), (P(),) * 9),
                 # accumulators are psum'd every epoch (replicated by
                 # construction); skip the conservative rep checker
                 check_rep=False)
@@ -432,14 +437,28 @@ def simulate_scan(env_cfg: EnvConfig, tables: ProfileTables, policy,
     metrics = FleetMetrics(slo_s=fleet.slo_s)
     metrics.dropped = dropped
     epoch_log = EpochLog(stride=fleet.log_stride, cap=fleet.log_cap)
+    (q_jobs, backlog, drop_t, slo_t, alive_t,
+     srv_t, lsum_t, lmax_t, e_t) = ys
     if fleet.record_epochs:
-        q_jobs, backlog, drop_t, slo_t, alive_t = ys
         epoch_log.extend_columns(
             epoch=np.arange(T), arrivals=counts[:, :n].sum(axis=1),
             queue_jobs=q_jobs, backlog_s=backlog, dropped=drop_t,
             slo_hits=slo_t, alive=alive_t, regime=np.zeros(T, np.int64))
+    tl = None
+    if fleet.timeline:
+        from repro.obs.slo import SLOConfig
+        from repro.obs.timeline import Timeline
+        tl = Timeline(slo_s=fleet.slo_s, slot_seconds=slot,
+                      stride=fleet.log_stride, engine="scan")
+        with obs.span("fleet.timeline"):
+            tl.extend_epochs(
+                epoch=np.arange(T), arrivals=counts[:, :n].sum(axis=1),
+                served=srv_t, dropped=drop_t, slo_hits=slo_t,
+                alive=alive_t, queue_jobs=q_jobs, backlog_s=backlog,
+                lat_sum=lsum_t, lat_max=lmax_t, energy_j=e_t)
+            tl.finalize(SLOConfig(target=fleet.slo_target))
     sel_hist = acc["hist_sel"].astype(np.int64).reshape(M, V, K)
     return SimResult(summary=summary, metrics=metrics,
                      selection_hist=sel_hist, epochs=T, served=served,
                      duration_s=duration, cross_check=None,
-                     epoch_log=epoch_log, adaptation=None)
+                     epoch_log=epoch_log, adaptation=None, timeline=tl)

@@ -9,7 +9,7 @@ came from the analytical pricer or from wall-clock decode steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -82,6 +82,21 @@ class FleetMetrics:
         """Requests lost outright (dead device): SLO misses, no latency."""
         self.dropped += int(n)
 
+    def mark(self) -> Tuple[int, int]:
+        """Opaque position in the (latency, energy) batch lists; pair
+        with ``since`` to slice out one epoch's recordings."""
+        return (len(self._lat), len(self._energy))
+
+    def since(self, mark: Tuple[int, int]) -> Tuple[np.ndarray, np.ndarray]:
+        """(latencies, energies) recorded after ``mark`` — read-only
+        concatenated views the timeline capture summarizes per epoch."""
+        i, j = mark
+        lat = np.concatenate(self._lat[i:]) if len(self._lat) > i \
+            else np.zeros(0)
+        en = np.concatenate(self._energy[j:]) if len(self._energy) > j \
+            else np.zeros(0)
+        return lat, en
+
     @property
     def latencies_s(self) -> np.ndarray:
         return np.concatenate(self._lat) if self._lat else np.zeros(0)
@@ -125,6 +140,11 @@ class EpochLog:
     ``stride`` keeps every stride-th offered row; ``cap`` stops keeping
     rows after ``cap`` are stored. Both bound memory on mega-fleet
     horizons without touching the simulation itself.
+
+    The most recently offered row is always retained (cap permitting):
+    a stride-skipped final epoch is held pending and materialized on
+    first read, so timelines and summaries agree at the horizon even
+    when the run length isn't stride-aligned.
     """
 
     def __init__(self, stride: int = 1, cap: Optional[int] = None):
@@ -135,6 +155,7 @@ class EpochLog:
         self._cols: Dict[str, np.ndarray] = {}
         self._n = 0          # rows stored
         self._offered = 0    # rows offered (pre stride/cap)
+        self._pending: Optional[Dict] = None   # last stride-skipped row
 
     def _grow(self, need: int):
         for k, col in self._cols.items():
@@ -143,12 +164,7 @@ class EpochLog:
                 new[:self._n] = col[:self._n]
                 self._cols[k] = new
 
-    def append(self, row: Dict) -> None:
-        keep = (self._offered % self.stride == 0) and (
-            self.cap is None or self._n < self.cap)
-        self._offered += 1
-        if not keep:
-            return
+    def _store(self, row: Dict) -> None:
         if not self._cols:
             for k, v in row.items():
                 dtype = np.int64 if isinstance(v, (int, np.integer)) \
@@ -160,6 +176,26 @@ class EpochLog:
             self._cols[k][self._n] = v
         self._n += 1
 
+    def _flush_pending(self) -> None:
+        """Materialize the held final row before any read."""
+        if self._pending is None:
+            return
+        row, self._pending = self._pending, None
+        if self.cap is None or self._n < self.cap:
+            self._store(row)
+
+    def append(self, row: Dict) -> None:
+        keep = (self._offered % self.stride == 0) and (
+            self.cap is None or self._n < self.cap)
+        self._offered += 1
+        if not keep:
+            # hold the row: if it turns out to be the horizon's last,
+            # reads materialize it so the log ends at the final epoch
+            self._pending = dict(row)
+            return
+        self._pending = None
+        self._store(row)
+
     def extend_columns(self, **cols) -> None:
         """Bulk-append equal-length columns (the scan engine's stacked
         per-epoch outputs), applying stride/cap by slicing."""
@@ -167,10 +203,16 @@ class EpochLog:
         idx = np.arange(self._offered, self._offered + T)
         keep = (idx % self.stride) == 0
         self._offered += T
-        sel = {k: np.asarray(v)[keep] for k, v in cols.items()}
-        m = len(next(iter(sel.values()))) if sel else 0
+        arrs = {k: np.asarray(v) for k, v in cols.items()}
+        sel = {k: v[keep] for k, v in arrs.items()}
+        kept = len(next(iter(sel.values()))) if sel else 0
+        m = kept
         if self.cap is not None:
             m = min(m, max(self.cap - self._n, 0))
+        # the batch's final row stays pending unless it was stored
+        stored_last = T > 0 and bool(keep[-1]) and m == kept
+        self._pending = None if stored_last or T == 0 \
+            else {k: v[-1] for k, v in arrs.items()}
         if m == 0:
             return
         if not self._cols:
@@ -182,10 +224,12 @@ class EpochLog:
         self._n += m
 
     def column(self, key: str) -> np.ndarray:
+        self._flush_pending()
         return self._cols[key][:self._n]
 
     @property
     def columns(self) -> Dict[str, np.ndarray]:
+        self._flush_pending()
         return {k: c[:self._n] for k, c in self._cols.items()}
 
     def _row(self, i: int) -> Dict:
@@ -193,15 +237,19 @@ class EpochLog:
                 for k, c in self._cols.items()}
 
     def __len__(self) -> int:
+        self._flush_pending()
         return self._n
 
     def __bool__(self) -> bool:
+        self._flush_pending()
         return self._n > 0
 
     def __iter__(self) -> Iterator[Dict]:
+        self._flush_pending()
         return (self._row(i) for i in range(self._n))
 
     def __getitem__(self, i):
+        self._flush_pending()
         if isinstance(i, slice):
             return [self._row(j) for j in range(*i.indices(self._n))]
         if i < 0:

@@ -110,11 +110,13 @@ def test_autoscaler_threshold_scales_dvfs_first_then_replicas():
     pool.dvfs_idx[:] = 0    # start below the top DVFS step
     asc = Autoscaler(AutoscalerConfig(policy="threshold"), 1)
     deep = np.asarray([50.0])
-    assert asc.step(pool, deep) == 1
+    decisions = asc.step(pool, deep)
+    assert [d["action"] for d in decisions] == ["dvfs_up"]
+    assert decisions[0]["queue"] == 50.0    # measured-depth trigger
     assert pool.dvfs_idx[0] == 1 and pool.replicas[0] == 1   # DVFS first
-    assert asc.step(pool, deep) == 1
+    assert [d["action"] for d in asc.step(pool, deep)] == ["replica_up"]
     assert pool.replicas[0] == 2                             # then replica
-    assert asc.step(pool, deep) == 0                         # at capacity
+    assert asc.step(pool, deep) == []                        # at capacity
 
 
 def test_autoscaler_threshold_scales_down_replicas_first():
@@ -123,11 +125,11 @@ def test_autoscaler_threshold_scales_down_replicas_first():
     pool = ServerPool(cluster)
     asc = Autoscaler(AutoscalerConfig(policy="threshold"), 1)
     idle = np.asarray([0.0])
-    assert asc.step(pool, idle) == 1
+    assert [d["action"] for d in asc.step(pool, idle)] == ["replica_down"]
     assert pool.replicas[0] == 1 and pool.dvfs_idx[0] == 1   # replica first
-    assert asc.step(pool, idle) == 1
+    assert [d["action"] for d in asc.step(pool, idle)] == ["dvfs_down"]
     assert pool.dvfs_idx[0] == 0                             # then DVFS
-    assert asc.step(pool, idle) == 0                         # at the floor
+    assert asc.step(pool, idle) == []                        # at the floor
 
 
 def test_autoscaler_hysteresis_waits_for_patience_then_cools_down():
@@ -138,15 +140,15 @@ def test_autoscaler_hysteresis_waits_for_patience_then_cools_down():
     asc = Autoscaler(AutoscalerConfig(policy="hysteresis", patience=3,
                                       cooldown=2), 1)
     deep = np.asarray([50.0])
-    assert asc.step(pool, deep) == 0      # breach 1
-    assert asc.step(pool, deep) == 0      # breach 2
-    assert asc.step(pool, deep) == 1      # breach 3: acts
+    assert asc.step(pool, deep) == []     # breach 1
+    assert asc.step(pool, deep) == []     # breach 2
+    assert len(asc.step(pool, deep)) == 1     # breach 3: acts
     assert pool.dvfs_idx[0] == 1
-    assert asc.step(pool, deep) == 0      # cooldown epoch 1
-    assert asc.step(pool, deep) == 0      # cooldown epoch 2
+    assert asc.step(pool, deep) == []     # cooldown epoch 1
+    assert asc.step(pool, deep) == []     # cooldown epoch 2
     # the breach never cleared: streak rode through the hold, so the
     # first post-cooldown epoch escalates (replica, DVFS already topped)
-    assert asc.step(pool, deep) == 1
+    assert len(asc.step(pool, deep)) == 1
     assert pool.replicas[0] == 2
     # a calm epoch resets the streak: no further action
     asc.step(pool, np.asarray([0.0]))

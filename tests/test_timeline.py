@@ -1,0 +1,476 @@
+"""repro.obs.timeline / slo / traindiag: the fleet flight recorder.
+
+The load-bearing guarantees: capture is *result-neutral* (SimResult is
+bit-identical with the recorder on vs off, on every engine, cluster
+included), the SLO burn math follows the multi-window page/clear state
+machine, stride subsampling always retains the horizon's final epoch,
+the `cluster-brownout` acceptance regime produces the full annotated
+record (regime switches, measured-depth autoscale triggers, per-server
+series, a burn alert that fires during the brownout and clears after
+recovery) through the fleetview JSON export, and the A2C/PPO learner
+diagnostics add zero trace sites.
+"""
+import importlib.util
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import A2CConfig, make_paper_env
+from repro.core import a2c as A2C
+from repro.core import ppo as PPO
+from repro.obs import jaxmon, read_events, recording, report
+from repro.obs.events import Recorder
+from repro.obs.slo import SLOConfig, compute
+from repro.obs.timeline import (Timeline, read_timeline, write_timeline)
+from repro.obs.traindiag import (DIAG_KEYS, TrainDiag, approx_kl,
+                                 check_health, explained_variance)
+from repro.policies import build_policy
+from repro.scenarios import get_scenario, run_scenario
+from repro.sim import EpochLog, FleetConfig, simulate
+
+
+def _world(preset):
+    sc = get_scenario(preset)
+    env_cfg, tables, model_ids, bf = sc.build_env()
+    return sc, env_cfg, tables, model_ids, bf
+
+
+def _run(sc, env_cfg, tables, model_ids, bf, policy, engine, *,
+         n_requests, seed=0, autoscaler=None, **fl_kw):
+    fl = FleetConfig(slo_s=sc.slo_s, engine=engine, **fl_kw)
+    backend = bf() if engine != "scan" else None
+    return simulate(env_cfg, tables, policy, sc.build_trace(),
+                    n_requests=n_requests, seed=seed, fleet=fl,
+                    backend=backend, model_ids=model_ids,
+                    autoscaler=autoscaler)
+
+
+# --------------------------------------------------------------------------
+# SLO error budgets: burn math + the multi-window page state machine
+# --------------------------------------------------------------------------
+
+def test_slo_burn_rate_math():
+    # constant 10% miss rate against a 5% budget: burn = 2.0 everywhere
+    T = 40
+    arrivals = np.full(T, 100)
+    hits = np.full(T, 90)
+    rep = compute(np.arange(T), arrivals, hits, SLOConfig(target=0.95))
+    np.testing.assert_allclose(rep.burn_fast, 2.0)
+    np.testing.assert_allclose(rep.burn_slow, 2.0)
+    assert rep.attainment == pytest.approx(0.9)
+    assert rep.alerts == []          # 2x < both page thresholds
+    # budget: allowed = 0.05 * 4000 = 200, spent 400 -> exhausted
+    assert rep.budget_remaining == 0.0
+    assert rep.time_to_exhaustion == 0.0
+
+
+def test_slo_alert_fires_and_clears():
+    # calm -> hard brownout (60% miss, 12x burn) -> calm again
+    cfg = SLOConfig(target=0.95)    # fast 8x/8ep, slow 4x/32ep
+    arrivals = np.full(80, 100)
+    hits = np.full(80, 100)
+    hits[30:50] = 40
+    rep = compute(np.arange(80), arrivals, hits, cfg)
+    assert len(rep.alerts) == 1
+    a = rep.alerts[0]
+    # fires only once BOTH windows breach (slow window needs several
+    # bad epochs), clears when the fast window recovers
+    assert 30 < a["start"] < 50
+    assert a["end"] is not None and a["end"] > 50
+    assert a["peak_burn_fast"] == pytest.approx(12.0)
+    assert a["peak_burn_fast"] > cfg.fast_burn
+    assert a["peak_burn_slow"] > cfg.slow_burn
+    # one bad epoch never pages (slow window holds it back)
+    hits2 = np.full(80, 100)
+    hits2[30] = 0
+    assert compute(np.arange(80), arrivals, hits2, cfg).alerts == []
+
+
+def test_slo_unclosed_alert_and_page_epochs():
+    # run ends mid-incident: end stays None, page_epochs counts to T
+    arrivals = np.full(40, 100)
+    hits = np.full(40, 100)
+    hits[20:] = 30
+    rep = compute(np.arange(40), arrivals, hits, SLOConfig(target=0.95))
+    assert len(rep.alerts) == 1 and rep.alerts[0]["end"] is None
+    assert rep.summary()["page_epochs"] == 40 - rep.alerts[0]["start"]
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="target"):
+        SLOConfig(target=1.0)
+    with pytest.raises(ValueError, match="window"):
+        SLOConfig(fast_window=16, slow_window=8)
+    assert SLOConfig(target=0.98).budget == pytest.approx(0.02)
+
+
+def test_slo_emit_events_folds_into_report_timeline():
+    arrivals = np.full(40, 100)
+    hits = np.full(40, 100)
+    hits[10:30] = 20
+    rep = compute(np.arange(40), arrivals, hits, SLOConfig(target=0.95))
+    assert rep.alerts
+    r = Recorder()
+    obs.set_recorder(r)
+    try:
+        from repro.obs import slo as slo_mod
+        slo_mod.emit_events(rep)
+    finally:
+        obs.set_recorder(None)
+    names = [e["name"] for e in r.events if e["type"] == "event"]
+    assert "slo.burn_alert" in names and "slo.budget" in names
+    # report.fold routes slo.* (and timeline.*) into the run timeline
+    folded = report.fold(r.events)
+    assert any(t["name"].startswith("slo.") for t in folded["timeline"])
+
+
+# --------------------------------------------------------------------------
+# stride retention: the horizon's final epoch is never dropped
+# --------------------------------------------------------------------------
+
+def test_epoch_log_stride_retains_final_epoch():
+    # stride 3, horizon 10: epochs 0,3,6,9 kept by stride; 9 is last
+    log = EpochLog(stride=3)
+    for e in range(10):
+        log.append({"epoch": e})
+    assert list(log.column("epoch")) == [0, 3, 6, 9]
+    # horizon 11: epoch 10 is stride-skipped but must be retained
+    log2 = EpochLog(stride=3)
+    for e in range(11):
+        log2.append({"epoch": e})
+    assert list(log2.column("epoch")) == [0, 3, 6, 9, 10]
+    # ...and the held row always tracks the newest offered epoch
+    log3 = EpochLog(stride=3)
+    for e in range(12):
+        log3.append({"epoch": e})
+    assert list(log3.column("epoch")) == [0, 3, 6, 9, 11]
+
+
+def test_timeline_stride_retains_final_epoch():
+    tl = Timeline(stride=3)
+    for e in range(11):
+        tl.append_epoch(epoch=e, arrivals=10, dropped=0, slo_hits=9,
+                        alive=2, regime=0, queue_jobs=0.0, backlog_s=0.0,
+                        lat=np.array([0.1]), energy_j=1.0)
+    assert list(tl.column("epoch")) == [0, 3, 6, 9, 10]
+    assert len(tl) == 5
+
+
+def test_timeline_scan_bulk_path_matches_stride_rule():
+    tl = Timeline(stride=4, slot_seconds=2.0)
+    T = 10
+    z = np.zeros(T)
+    tl.extend_epochs(epoch=np.arange(T), arrivals=np.full(T, 8),
+                     served=np.full(T, 8), dropped=z, slo_hits=np.full(T, 7),
+                     alive=np.full(T, 4), queue_jobs=z, backlog_s=z,
+                     lat_sum=np.full(T, 1.6), lat_max=np.full(T, 0.5),
+                     energy_j=np.full(T, 3600.0))
+    assert list(tl.column("epoch")) == [0, 4, 8, 9]
+    # scan-carry rule: mean/max exact, percentiles NaN
+    assert tl.column("lat_mean")[0] == pytest.approx(0.2)
+    assert np.isnan(tl.column("lat_p95")).all()
+    assert tl.column("energy_wh")[0] == pytest.approx(1.0)
+    assert tl.column("goodput")[0] == pytest.approx(3.5)
+
+
+# --------------------------------------------------------------------------
+# crash-safe JSONL reads + incremental flushing
+# --------------------------------------------------------------------------
+
+def test_read_events_skips_torn_final_line(tmp_path):
+    path = str(tmp_path / "e.jsonl")
+    with recording(path):
+        obs.event("first")
+        obs.event("second")
+    with open(path, "a") as f:
+        f.write('{"type": "event", "name": "torn", "att')   # crash here
+    meta, events = read_events(path)
+    names = [e.get("name") for e in events if e["type"] == "event"]
+    assert names == ["first", "second"]
+
+
+def test_read_events_rejects_mid_file_corruption(tmp_path):
+    path = str(tmp_path / "e.jsonl")
+    with recording(path):
+        obs.event("first")
+    lines = open(path).read().splitlines()
+    lines.insert(1, "{broken")                # corrupt a middle line
+    lines.append(lines[-1])                   # valid tail after it
+    open(path, "w").write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="corrupt JSONL at line 2"):
+        read_events(path)
+
+
+def test_recorder_flush_every_writes_incrementally(tmp_path):
+    path = str(tmp_path / "e.jsonl")
+    rec = Recorder(path=path, flush_every=2)
+    obs.set_recorder(rec)
+    try:
+        obs.event("a")
+        obs.event("b")                        # hits the flush threshold
+        meta, events = read_events(path)      # readable pre-close
+        assert [e["name"] for e in events
+                if e["type"] == "event"] == ["a", "b"]
+        obs.event("c")                        # below threshold: unflushed
+    finally:
+        obs.set_recorder(None)
+    rec.close()
+    meta, events = read_events(path)
+    assert [e["name"] for e in events
+            if e["type"] == "event"] == ["a", "b", "c"]
+
+
+# --------------------------------------------------------------------------
+# result neutrality: recording must not change the simulation
+# --------------------------------------------------------------------------
+
+def _assert_bit_identical(a, b):
+    assert np.array_equal(a.selection_hist, b.selection_hist)
+    assert a.served == b.served and a.epochs == b.epochs
+    assert a.metrics.dropped == b.metrics.dropped
+    assert np.array_equal(a.metrics.latencies_s, b.metrics.latencies_s)
+    assert np.array_equal(a.metrics.energies_j, b.metrics.energies_j)
+    assert a.summary == b.summary
+
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized", "scan"])
+def test_recording_neutral_across_engines(engine, tmp_path):
+    sc, env_cfg, tables, mids, bf = _world("diurnal-fleet")
+    pol = build_policy("device_only", env_cfg, tables)
+    kw = dict(n_requests=3000, seed=1)
+    off = _run(sc, env_cfg, tables, mids, bf, pol, engine, **kw)
+    with recording(str(tmp_path / "t.jsonl")):
+        on = _run(sc, env_cfg, tables, mids, bf, pol, engine,
+                  timeline=True, **kw)
+    _assert_bit_identical(off, on)
+    assert off.timeline is None
+    tl = on.timeline
+    assert len(tl) == on.epochs
+    assert tl.engine == engine
+    assert tl.slo_report is not None
+    # the recorded series account for the same workload
+    assert int(tl.column("served").sum()) == on.served
+    assert int(tl.column("arrivals").sum()) >= on.served
+    if engine == "scan":
+        assert np.isnan(tl.column("lat_p95")).all()   # scan-carry rule
+    else:
+        assert np.isfinite(tl.column("lat_p95")).any()
+
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized"])
+def test_recording_neutral_on_cluster_preset(engine, tmp_path):
+    sc, env_cfg, tables, mids, bf = _world("edge-cluster")
+    pol = build_policy("join_shortest_queue", env_cfg, tables)
+    kw = dict(n_requests=3000, seed=0, autoscaler=sc.build_autoscaler())
+    off = _run(sc, env_cfg, tables, mids, bf, pol, engine, **kw)
+    with recording(str(tmp_path / "t.jsonl")):
+        on = _run(sc, env_cfg, tables, mids, bf, pol, engine,
+                  timeline=True, **kw)
+    _assert_bit_identical(off, on)
+    tl = on.timeline
+    assert tl.n_servers == 4
+    # per-server vector columns: (epochs, S), captured pre-autoscale
+    for key in ("srv_queue", "srv_dvfs", "srv_replicas", "srv_power_w"):
+        assert tl.column(key).shape == (len(tl), 4)
+    assert (tl.column("srv_replicas") >= 1).all()
+
+
+def test_online_run_annotates_triggers_and_hotswaps():
+    """Drift + closed-loop adaptation leave their marks: the Page-
+    Hinkley trip, the burst start, and every param hot-swap land as
+    timeline annotations alongside the regime switch."""
+    from repro.online import OnlineConfig, get_schedule
+    from repro.sim import PoissonTrace
+
+    cfg, tables = make_paper_env(n_uavs=3, slot_seconds=10.0,
+                                 peak_rps=20.0)
+    pol = build_policy("a2c", cfg, tables, episodes=2)
+    pol.train(seed=0)
+    res = simulate(cfg, tables, pol, PoissonTrace(rate_rps=6.0),
+                   n_requests=6000, seed=0,
+                   fleet=FleetConfig(slo_s=1.0, timeline=True),
+                   schedule=get_schedule("link-brownout", onset=5,
+                                         recover=0),
+                   online=OnlineConfig(algo="a2c", gate="always",
+                                       window=16, min_window=4,
+                                       update_every=1))
+    assert res.adaptation["online"]["updates"] > 1
+    kinds = {a["kind"] for a in res.timeline.annotations}
+    assert "regime_switch" in kinds and "hotswap" in kinds
+    assert "burst_start" in kinds or "drift_trigger" in kinds
+    swaps = [a for a in res.timeline.annotations if a["kind"] == "hotswap"]
+    assert len(swaps) == res.adaptation["online"]["updates"]
+
+
+# --------------------------------------------------------------------------
+# the acceptance regime: cluster-brownout through the JSON export
+# --------------------------------------------------------------------------
+
+def _load_fleetview():
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "fleetview.py")
+    spec = importlib.util.spec_from_file_location("fleetview", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def brownout_export(tmp_path_factory):
+    """One small cluster-brownout run -> write_timeline -> fleetview
+    summarize: the exact artifact chain CI exercises, sized so the
+    brownout burns hard enough to page and the recovery clears it."""
+    sc = get_scenario("cluster-brownout").replace(
+        seeds=(0,), n_requests=30_000, slo_target=0.98,
+        drift_kw={"onset": 8, "relax": 20, "scale": 1.75,
+                  "queue_scale": 6.0})
+    rep = run_scenario(sc, ("join_shortest_queue",), timeline=True)
+    r = rep.results["join_shortest_queue"]
+    path = str(tmp_path_factory.mktemp("fv") / "flight.json")
+    write_timeline(path, [{"policy": "join_shortest_queue", "seed": 0,
+                           "timeline": r.timelines[0]}],
+                   meta={"scenario": sc.name})
+    fv = _load_fleetview()
+    doc = read_timeline(path)
+    return fv, doc, fv.summarize(doc), r
+
+
+def test_brownout_regime_switch_annotations(brownout_export):
+    _, _, summ, _ = brownout_export
+    run = summ["runs"][0]
+    switches = [a for a in run["annotations"]
+                if a["kind"] == "regime_switch"]
+    assert [s["epoch"] for s in switches] == [8, 20]   # onset + relax
+    assert run["annotation_counts"]["regime_switch"] == 2
+    # the regime column tracks the switches (patch index, monotone:
+    # 0 calm, 1 surge, 2 recovered)
+    regimes = doc_col(brownout_export[1], "regime")
+    assert regimes[7] == 0 and regimes[10] == 1 and regimes[-1] == 2
+
+
+def doc_col(doc, key):
+    return doc["runs"][0]["timeline"]["columns"][key]
+
+
+def test_brownout_autoscale_decision_with_measured_trigger(
+        brownout_export):
+    _, _, summ, _ = brownout_export
+    run = summ["runs"][0]
+    decisions = [a for a in run["annotations"] if a["kind"] == "autoscale"]
+    assert decisions, "autoscaler never moved"
+    for d in decisions:
+        assert d["action"] in ("dvfs_up", "dvfs_down", "replica_up",
+                               "replica_down")
+        assert isinstance(d["queue"], (int, float))    # measured depth
+    # the surge must push capacity *up* at some point
+    assert any(d["action"] in ("dvfs_up", "replica_up") for d in decisions)
+
+
+def test_brownout_per_server_series(brownout_export):
+    _, _, summ, _ = brownout_export
+    srv = summ["runs"][0]["servers"]
+    assert srv["n"] == 4 and len(srv["names"]) == 4
+    epochs = summ["runs"][0]["epochs"]
+    for key in ("srv_queue", "srv_dvfs", "srv_replicas", "srv_power_w"):
+        assert len(srv[key]) == 4
+        assert all(len(s) == epochs for s in srv[key])
+    # DVFS actually moved during the surge
+    dvfs = np.asarray(srv["srv_dvfs"], float)
+    assert (dvfs.max(axis=1) > dvfs.min(axis=1)).any()
+
+
+def test_brownout_burn_alert_fires_and_clears(brownout_export):
+    _, _, summ, _ = brownout_export
+    slo = summ["runs"][0]["slo"]
+    assert slo["alerts"] >= 1
+    a = slo["alerts_detail"][0]
+    # fires during the brownout (epochs 8..20), clears after recovery
+    assert 8 <= a["start"] <= 20
+    assert a["end"] is not None and a["end"] > 20
+    assert a["peak_burn_fast"] > slo["fast_burn"]
+    assert a["peak_burn_slow"] > slo["slow_burn"]
+    # mirrored as timeline annotations too
+    kinds = summ["runs"][0]["annotation_counts"]
+    assert kinds.get("slo_alert", 0) == slo["alerts"]
+
+
+def test_brownout_scenario_report_carries_slo(brownout_export):
+    _, _, _, r = brownout_export
+    assert r.slo is not None
+    assert r.slo["mean"]["alerts"] >= 1
+    assert r.slo["per_seed"][0]["target"] == pytest.approx(0.98)
+
+
+def test_fleetview_renders_and_exports(brownout_export, tmp_path):
+    fv, doc, summ, _ = brownout_export
+    text = fv.render(doc)
+    assert "error budget" in text and "page #1" in text
+    assert "regime_switch" in text and "tier0" in text
+    html = fv.to_html(doc)
+    assert "<svg" in html and "flight recorder" in html
+    # the summary is valid JSON end to end
+    json.loads(json.dumps(summ))
+    assert summ["type"] == "fleetview"
+
+
+def test_fleetview_sparkline_handles_nan_and_flat():
+    fv = _load_fleetview()
+    assert fv.spark(np.array([np.nan, np.nan]), 10) == "··"
+    assert fv.spark(np.array([1.0, 1.0, 1.0]), 10) == "▄▄▄"
+    s = fv.spark(np.linspace(0, 1, 64), 8)
+    assert len(s) == 8 and s[0] == "▁" and s[-1] == "█"
+
+
+# --------------------------------------------------------------------------
+# learner diagnostics: series present, zero added trace sites
+# --------------------------------------------------------------------------
+
+def test_explained_variance_and_kl_helpers():
+    r = np.array([1.0, 2.0, 3.0, 4.0])
+    assert float(explained_variance(r, r)) == pytest.approx(1.0)
+    # a constant prediction explains nothing; an anti-correlated one
+    # is worse than the mean (EV = 1 - Var(2r)/Var(r) = -3)
+    assert float(explained_variance(r, np.zeros(4))) == pytest.approx(
+        0.0, abs=1e-6)
+    assert float(explained_variance(r, -r)) == pytest.approx(-3.0,
+                                                             rel=1e-5)
+    assert float(explained_variance(np.ones(4), np.zeros(4))) == 0.0
+    lp = np.array([-1.0, -2.0])
+    assert float(approx_kl(lp, lp)) == pytest.approx(0.0)
+    assert float(approx_kl(lp, lp - 0.5)) == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("algo", ["a2c", "ppo"])
+def test_train_diag_series_with_zero_retraces(algo):
+    cfg, tables = make_paper_env(n_uavs=3)
+    jaxmon.reset_trace_counts()
+    with jaxmon.track_traces() as d:
+        if algo == "a2c":
+            _, hist = A2C.train(cfg, tables, A2CConfig(episodes=4),
+                                jax.random.key(0))
+        else:
+            _, hist = PPO.train(cfg, tables, PPO.PPOConfig(episodes=4),
+                                jax.random.key(0))
+    # one trace for the whole run: the diagnostics add no trace sites
+    assert d.get(f"train.{algo}", 0) == 1, f"re-traced: {d}"
+    diag = TrainDiag.from_history(hist)
+    assert diag.updates == 4
+    assert set(DIAG_KEYS) <= set(diag.keys)
+    for k in DIAG_KEYS:
+        assert np.isfinite(diag.column(k)).all(), k
+    s = diag.summary()
+    assert s["updates"] == 4 and "entropy" in s
+    assert isinstance(check_health(diag), list)
+
+
+def test_check_health_flags_kl_spike_and_entropy_collapse():
+    diag = TrainDiag.from_history([
+        {"entropy": 1e-6, "approx_kl": 5.0, "grad_norm": 1.0},
+        {"entropy": 1e-6, "approx_kl": 5.0, "grad_norm": 1.0}])
+    issues = " ".join(check_health(diag))
+    assert "approx_kl" in issues or "kl" in issues.lower()
+    assert "entropy" in issues.lower()
